@@ -1,0 +1,45 @@
+"""Table III: ablation V0 (full RELIEF) / V1 (no elastic) / V2 (no cohort
+aggregation) / V3 (random allocation), both backbones, both datasets."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import (RESULTS_DIR, BenchSpec, fmt_table, run_spec,
+                               save_csv)
+
+VARIANTS = ["relief", "v1", "v2", "v3"]  # relief == V0 (cache-shared with bench_main)
+
+
+def run(rounds: int = 30, seed: int = 0, backbones=("b1",),
+        quick: bool = False) -> list[dict]:
+    if quick:
+        rounds, backbones = 6, ("b1",)
+    rows = []
+    for backbone in backbones:
+        base = run_spec(BenchSpec("fedavg", "pamap2", backbone, rounds, seed))
+        for v in VARIANTS:
+            row = {"variant": v, "backbone": backbone}
+            for ds in ("pamap2", "mhealth"):
+                r = run_spec(BenchSpec(v, ds, backbone, rounds, seed))
+                row[f"f1_{ds}"] = r["f1"]
+                if ds == "pamap2":
+                    row["speedup"] = (base["round_time_s"]
+                                      / max(r["round_time_s"], 1e-9))
+                    row["energy_j"] = r["energy_j"]
+            rows.append(row)
+    cols = [("variant", "variant"), ("backbone", "backbone"),
+            ("PAMAP2 F1", "f1_pamap2"), ("MHEALTH F1", "f1_mhealth"),
+            ("Speedup", "speedup"), ("J/r", "energy_j")]
+    print(fmt_table(rows, cols, "Table III (ablation)"))
+    save_csv(rows, os.path.join(RESULTS_DIR, "table_ablation.csv"),
+             [k for _, k in cols])
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(a.rounds, quick=a.quick)

@@ -1,0 +1,42 @@
+"""Fig. 5: macro-F1 vs communication round for five representative methods
+(reuses the cached runs from bench_main)."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import RESULTS_DIR, BenchSpec, run_spec, save_csv
+
+METHODS = ["fedavg", "fedel", "harmony", "relief"]
+
+
+def run(rounds: int = 30, seed: int = 0, quick: bool = False) -> list[dict]:
+    methods = METHODS if not quick else ["fedavg", "relief"]
+    if quick:
+        rounds = 6
+    rows = []
+    for backbone in ("b1",):
+        for ds in ("pamap2", "mhealth"):
+            for m in methods:
+                r = run_spec(BenchSpec(m, ds, backbone, rounds, seed))
+                for f1, rd in zip(r["f1_curve"], r["f1_rounds"]):
+                    rows.append({"backbone": backbone, "dataset": ds,
+                                 "method": m, "round": rd, "f1": f1})
+    save_csv(rows, os.path.join(RESULTS_DIR, "fig_convergence.csv"),
+             ["backbone", "dataset", "method", "round", "f1"])
+    # terse terminal view: final few points per curve
+    print("\n== Fig. 5 (convergence, final F1 by method) ==")
+    seen = {}
+    for row in rows:
+        seen[(row["backbone"], row["dataset"], row["method"])] = row["f1"]
+    for k, v in sorted(seen.items()):
+        print(f"  {k[0]} {k[1]:8s} {k[2]:12s} -> {v:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(a.rounds, quick=a.quick)

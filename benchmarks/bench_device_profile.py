@@ -1,0 +1,69 @@
+"""Fig. 8 (real-device study analogue): per-device round breakdown
+(compute / comm / idle), power phases, and F1-vs-cumulative-fleet-energy,
+under the *forward-aware* timing model (Sec. VII) with the two-Jetson
+profile pair (MAXN 60 W vs 15 W mode). Reproduces the paper's finding that
+fixed forward cost shrinks the LoRA-backbone speedup (9.41x sim -> ~1.4x
+real) while the backward-only reduction survives."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, BenchSpec, run_spec
+
+
+def run(rounds: int = 20, seed: int = 0, quick: bool = False) -> dict:
+    if quick:
+        rounds = 5
+    rounds = min(rounds, 8)
+    out = {}
+    for backbone in ("b1", "b2"):
+        ds = "pamap2" if backbone == "b1" else "mhealth"
+        rows = {}
+        for mode in ("flop_proportional", "fwd_aware"):
+            rows[mode] = {}
+            for m in ("fedavg", "relief"):
+                r = run_spec(BenchSpec(m, ds, backbone, rounds, seed,
+                                       sim_mode=mode))
+                rows[mode][m] = {"round_time_s": r["round_time_s"],
+                                 "energy_j": r["energy_j"], "f1": r["f1"],
+                                 "f1_curve": r["f1_curve"],
+                                 "round_times": r["round_times"],
+                                 "energy_curve": r["energy_j"]}
+        sim_speed = (rows["flop_proportional"]["fedavg"]["round_time_s"]
+                     / rows["flop_proportional"]["relief"]["round_time_s"])
+        real_speed = (rows["fwd_aware"]["fedavg"]["round_time_s"]
+                      / rows["fwd_aware"]["relief"]["round_time_s"])
+        out[backbone] = {
+            "sim_speedup_flop_proportional": sim_speed,
+            "speedup_fwd_aware": real_speed,
+            "gap_ratio": sim_speed / max(real_speed, 1e-9),
+            "energy_save_pct_fwd_aware": 100 * (
+                1 - rows["fwd_aware"]["relief"]["energy_j"]
+                / max(rows["fwd_aware"]["fedavg"]["energy_j"], 1e-9)),
+        }
+        # F1 vs cumulative fleet energy (Fig. 8c/f)
+        for m in ("fedavg", "relief"):
+            r = run_spec(BenchSpec(m, ds, backbone, rounds, seed,
+                                   sim_mode="fwd_aware"))
+            cum_e = np.cumsum([r["energy_j"]] * len(r["f1_curve"]))
+            out[backbone][f"{m}_f1_at_energy"] = list(
+                zip(cum_e.tolist(), r["f1_curve"]))
+        print(f"[device_profile:{backbone}] sim {sim_speed:.2f}x vs "
+              f"fwd-aware {real_speed:.2f}x (gap {out[backbone]['gap_ratio']:.2f}x), "
+              f"energy save {out[backbone]['energy_save_pct_fwd_aware']:.0f}%")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "device_profile.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(a.rounds, quick=a.quick)

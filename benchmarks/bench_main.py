@@ -1,0 +1,67 @@
+"""Tables I & II: main results across 11 methods x 2 datasets per backbone.
+
+Columns mirror the paper: F1 per dataset, rare-modality F1, speedup vs
+FedAvg (straggler-bound round time), TTA, comm volume, energy.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import (RESULTS_DIR, BenchSpec, METHOD_LABELS,
+                               fmt_table, run_spec, save_csv, tta_rounds)
+
+METHODS_B1 = ["fedavg", "fedprox", "fedel", "fedicu", "darkdistill",
+              "harmony", "pilot", "fedsa_lora", "helora", "fedlease",
+              "relief"]
+# B2 standard profile: the 6 methods the paper's B2 analysis centres on;
+# --full runs all 11 (container compile budget — DESIGN.md §7)
+METHODS_B2 = ["fedavg", "fedel", "harmony", "fedsa_lora", "helora",
+              "relief"]
+
+
+def run(backbone: str = "b1", rounds: int = 30, seed: int = 0,
+        methods=None, quick: bool = False) -> list[dict]:
+    methods = methods or (METHODS_B1 if backbone == "b1" else METHODS_B2)
+    if quick:
+        methods = ["fedavg", "fedel", "harmony", "relief"]
+        rounds = min(rounds, 6)
+    rows = []
+    for ds in ("pamap2", "mhealth"):
+        print(f"[bench_main:{backbone}] dataset={ds}")
+        base = run_spec(BenchSpec("fedavg", ds, backbone, rounds, seed))
+        thresh = 0.95 * base["f1"]
+        for m in methods:
+            r = run_spec(BenchSpec(m, ds, backbone, rounds, seed))
+            tta = tta_rounds(r["f1_curve"], r["f1_rounds"], thresh)
+            rows.append({
+                "method": METHOD_LABELS.get(m, m), "dataset": ds,
+                "backbone": backbone, "f1": r["f1"],
+                "rare_mod_f1": r["rare_mod_f1"],
+                "speedup": base["round_time_s"] / max(r["round_time_s"],
+                                                      1e-9),
+                "tta_rounds": tta if tta is not None else "-",
+                "comm_mb": r["upload_mb"],
+                "energy_j": r["energy_j"],
+                "energy_save_pct": 100 * (1 - r["energy_j"]
+                                          / max(base["energy_j"], 1e-9)),
+            })
+    cols = [("method", "method"), ("dataset", "dataset"), ("F1", "f1"),
+            ("RareF1", "rare_mod_f1"), ("Speedup", "speedup"),
+            ("TTA", "tta_rounds"), ("MB/r", "comm_mb"),
+            ("J/r", "energy_j"), ("Esave%", "energy_save_pct")]
+    print(fmt_table(rows, cols,
+                    f"Table {'I' if backbone == 'b1' else 'II'} "
+                    f"(Backbone {backbone})"))
+    save_csv(rows, os.path.join(RESULTS_DIR, f"table_main_{backbone}.csv"),
+             [k for _, k in cols])
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backbone", default="b1", choices=["b1", "b2"])
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(a.backbone, a.rounds, quick=a.quick)

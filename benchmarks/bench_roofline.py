@@ -1,0 +1,68 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-(arch x shape x mesh)
+roofline table (three terms, dominant bottleneck, MODEL_FLOPS ratio)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, fmt_table, save_csv
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def load_cells(pattern: str = "*.json") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def run(mesh: str = "single") -> list[dict]:
+    rows = []
+    for c in load_cells():
+        if c.get("mesh") != mesh or c.get("hillclimb"):
+            continue
+        if c["status"] == "skipped":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "dominant": "N/A (skip)", "note": c["reason"][:40]})
+            continue
+        if c["status"] != "ok":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "dominant": "ERROR"})
+            continue
+        if "roofline" not in c:  # multi-pod compile+memory-only pass
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "dominant": "(compiled)",
+                         "mem_gb": c.get("memory", {}).get("per_device_gb",
+                                                           -1),
+                         "fits": c.get("memory", {}).get("fits_16gb_hbm")})
+            continue
+        r = c["roofline"]
+        t_dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"],
+            "t_compute_s": r["t_compute_s"], "t_memory_s": r["t_memory_s"],
+            "t_collective_s": r["t_collective_s"], "dominant": r["dominant"],
+            "roofline_frac": r["t_compute_s"] / max(t_dom, 1e-12),
+            "useful_flops_ratio": c.get("useful_flops_ratio", 0.0),
+            "mem_gb": c.get("memory", {}).get("per_device_gb", -1),
+            "fits": c.get("memory", {}).get("fits_16gb_hbm", None),
+        })
+    cols = [("arch", "arch"), ("shape", "shape"), ("tc(s)", "t_compute_s"),
+            ("tm(s)", "t_memory_s"), ("tx(s)", "t_collective_s"),
+            ("dom", "dominant"), ("roofline%", "roofline_frac"),
+            ("useful%", "useful_flops_ratio"), ("GB/dev", "mem_gb"),
+            ("fits", "fits")]
+    print(fmt_table(rows, cols, f"Roofline table ({mesh}-pod)"))
+    save_csv(rows, os.path.join(RESULTS_DIR, f"roofline_{mesh}.csv"),
+             [k for _, k in cols])
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    run(ap.parse_args().mesh)

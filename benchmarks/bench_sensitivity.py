@@ -1,0 +1,57 @@
+"""Tables IV-V: sensitivity to the compute-heterogeneity gap (10x/55x/100x)
+and the fleet size (8/10 -> 20 -> 50 -> 100 clients)."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import (RESULTS_DIR, BenchSpec, fmt_table, run_spec,
+                               save_csv)
+
+METHODS = ["fedavg", "fedel", "relief"]
+
+
+def run(rounds: int = 20, seed: int = 0, dataset: str = "pamap2",
+        backbone: str = "b1", quick: bool = False) -> list[dict]:
+    methods = METHODS if not quick else ["fedavg", "relief"]
+    if quick:
+        rounds = 5
+    rows = []
+    for hetero in (10.0, None, 100.0):  # None = profile default (55x)
+        label = {10.0: "mild_10x", None: "moderate_55x",
+                 100.0: "extreme_100x"}[hetero]
+        row = {"factor": "hetero", "setting": label}
+        for m in methods:
+            r = run_spec(BenchSpec(m, dataset, backbone, rounds, seed,
+                                   hetero_scale=hetero))
+            row[m] = r["f1"]
+        rows.append(row)
+    fleet_sizes = (8, 20, 50, 100) if rounds >= 100 else (8,)
+    # N>=20 sweeps only at --full scale (each N recompiles the vmapped
+    # client axis; container budget — DESIGN.md §7)
+    for n in fleet_sizes:
+        row = {"factor": "scale", "setting": f"N={n}"}
+        for m in methods:
+            r = run_spec(BenchSpec(m, dataset, backbone, rounds, seed,
+                                   n_clients=n,
+                                   windows=max(40, 160 * 8 // n)))
+            row[m] = r["f1"]
+        rows.append(row)
+    cols = [("factor", "factor"), ("setting", "setting")] + \
+        [(m, m) for m in methods]
+    print(fmt_table(rows, cols, f"Tables IV-V (sensitivity, {dataset}, "
+                                f"{backbone})"))
+    save_csv(rows, os.path.join(RESULTS_DIR,
+                                f"table_sensitivity_{dataset}_{backbone}.csv"),
+             [k for _, k in cols])
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--dataset", default="pamap2")
+    ap.add_argument("--backbone", default="b1")
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(a.rounds, dataset=a.dataset, backbone=a.backbone, quick=a.quick)

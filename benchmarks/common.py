@@ -1,0 +1,164 @@
+"""Shared benchmark harness: one federated run -> one metrics row.
+
+Runs are cached as JSON under benchmarks/results/runs/ keyed by their full
+configuration, so every bench script (main tables, ablation, sensitivity,
+convergence, per-modality) reuses the same underlying runs and the suite is
+resumable after interruption.
+
+Scale note (DESIGN.md §7): default configs are reduced-but-faithful (same
+fleet topology, compute-gap and protocol as the paper; smaller models and
+fewer rounds for the 1-core CPU container). ``--full`` restores paper scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+RARE_MODALITIES = {"pamap2": ("mag", "hr"), "mhealth": ("mag", "ecg")}
+
+# method display names / citations (paper Tables I-II rows)
+METHOD_LABELS = {
+    "fedavg": "FedAvg [AISTATS'17]", "fedprox": "FedProx [MLSys'20]",
+    "fedel": "FedEL* [NeurIPS'25]", "fedicu": "FedICU* [ICML'25]",
+    "darkdistill": "DarkDistill* [KDD'25]", "harmony": "Harmony* [MobiSys'23]",
+    "pilot": "Pilot* [AAAI'25]", "fedsa_lora": "FedSA-LoRA* [ICLR'25]",
+    "helora": "HeLoRA* [TOIT'25]", "fedlease": "FedLEASE* [NeurIPS'25]",
+    "relief": "RELIEF (ours)", "v0": "RELIEF (V0)",
+    "v1": "V1 w/o elastic", "v2": "V2 w/o cohort agg", "v3": "V3 random alloc",
+}  # * = protocol-level reimplementation (see core/strategies.py docstrings)
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    method: str
+    dataset: str = "pamap2"
+    backbone: str = "b1"  # b1 (CNN) | b2 (frozen transformer + LoRA)
+    rounds: int = 30
+    seed: int = 0
+    hetero_scale: float | None = None  # None = profile default (55x)
+    n_clients: int | None = None  # None = paper fleet (8 / 10)
+    sim_mode: str = "flop_proportional"
+    windows: int = 160
+    small: bool = True  # reduced model configs
+
+    def key(self) -> str:
+        blob = json.dumps(dataclasses.asdict(self), sort_keys=True)
+        return (f"{self.method}_{self.dataset}_{self.backbone}_r{self.rounds}"
+                f"_s{self.seed}_" + hashlib.md5(blob.encode()).hexdigest()[:8])
+
+
+def _build(spec: BenchSpec):
+    import jax
+
+    from repro.core.engine import FedConfig, FedRun
+    from repro.core.strategies import get_strategy
+    from repro.core.tasks import MMTask
+    from repro.data import make_har_dataset, mm_config_for
+    from repro.sim import make_fleet, scale_fleet
+
+    ds = make_har_dataset(spec.dataset, windows_per_subject=spec.windows,
+                          seed=spec.seed)
+    n_low = 2 if spec.dataset == "pamap2" else 4
+    fleet = make_fleet(3, 3, n_low, M=4, hetero_scale=spec.hetero_scale)
+    if spec.n_clients and spec.n_clients != fleet.N:
+        fleet = scale_fleet(fleet, spec.n_clients,
+                            np.random.default_rng(spec.seed))
+        ds = make_har_dataset(spec.dataset, windows_per_subject=spec.windows,
+                              seed=spec.seed, n_subjects=spec.n_clients)
+    if spec.small:
+        kw = (dict(d_feat=16, d_fused=64, cnn_ch=(16, 32))
+              if spec.backbone == "b1" else
+              dict(d_feat=16, d_fused=64, enc_layers=2, enc_d=32, enc_ff=64))
+    else:
+        kw = (dict(d_feat=32, d_fused=128, cnn_ch=(32, 64))
+              if spec.backbone == "b1" else
+              dict(d_feat=32, d_fused=128, enc_layers=4, enc_d=128,
+                   enc_ff=256))
+    cfg = mm_config_for(spec.dataset,
+                        backbone="cnn" if spec.backbone == "b1"
+                        else "transformer", **kw)
+    task, tr0 = MMTask.create(cfg, jax.random.PRNGKey(spec.seed))
+    fed = FedConfig(rounds=spec.rounds, eval_every=max(spec.rounds // 10, 1),
+                    seed=spec.seed, utilization=2e-5, t_overhead=0.1,
+                    sim_mode=spec.sim_mode)
+    run = FedRun.create(task, tr0, get_strategy(spec.method), fleet, fed)
+    return run, ds, task
+
+
+def run_spec(spec: BenchSpec, force: bool = False, verbose: bool = True) -> dict:
+    """Execute (or load cached) one federated benchmark run -> metrics dict."""
+    os.makedirs(os.path.join(RESULTS_DIR, "runs"), exist_ok=True)
+    cache = os.path.join(RESULTS_DIR, "runs", spec.key() + ".json")
+    if os.path.exists(cache) and not force:
+        with open(cache) as f:
+            return json.load(f)
+
+    from repro.core import metrics as M
+
+    run, ds, task = _build(spec)
+    hist = run.run(ds, log_every=0)
+
+    xs = np.concatenate(ds.test_x)
+    ys = np.concatenate(ds.test_y)
+    per_mod = task.eval_per_modality(run.state.trainable, xs, ys)
+    rare = M.rare_modality_f1(per_mod, RARE_MODALITIES[spec.dataset])
+    out = {
+        "spec": dataclasses.asdict(spec),
+        "f1": hist["f1"][-1],
+        "f1_curve": hist["f1"],
+        "f1_rounds": hist["f1_round"],
+        "per_modality_f1": per_mod,
+        "rare_mod_f1": rare,
+        "round_time_s": float(np.mean(hist["round_time_s"])),
+        "round_times": hist["round_time_s"],
+        "energy_j": float(np.mean(hist["energy_j"])),
+        "upload_mb": float(np.mean(hist["upload_mb"])),
+        "loss_curve": hist["loss"],
+        "divergence_final": np.asarray(hist["divergence"][-1]).tolist(),
+        "divergence_curves": np.asarray(hist["divergence"]).tolist(),
+        "group_names": task.layout.names,
+        "selected_frac": float(np.mean(hist["selected_frac"])),
+    }
+    with open(cache, "w") as f:
+        json.dump(out, f)
+    if verbose:
+        print(f"  [{spec.method:12s}] F1 {out['f1']:.3f} rare {rare:.3f} "
+              f"t/r {out['round_time_s']:.2f}s E/r {out['energy_j']:.0f}J "
+              f"{out['upload_mb']:.2f}MB")
+    return out
+
+
+def tta_rounds(f1_curve, f1_rounds, threshold: float):
+    for f, r in zip(f1_curve, f1_rounds):
+        if f >= threshold:
+            return r
+    return None
+
+
+def fmt_table(rows: list[dict], columns: list[tuple[str, str]],
+              title: str) -> str:
+    lines = [f"\n== {title} ==",
+             " | ".join(h for h, _ in columns),
+             "-|-".join("-" * len(h) for h, _ in columns)]
+    for row in rows:
+        cells = []
+        for _, k in columns:
+            v = row.get(k, "")
+            cells.append(f"{v:.3f}" if isinstance(v, float) else str(v))
+        lines.append(" | ".join(cells))
+    return "\n".join(lines)
+
+
+def save_csv(rows: list[dict], path: str, fields: list[str]) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(",".join(fields) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(k, "")) for k in fields) + "\n")

@@ -1,0 +1,74 @@
+"""Benchmark suite entry point — one bench per paper table/figure.
+
+  python -m benchmarks.run [--quick | --full] [--only main_b1,ablation,...]
+
+Default ("standard") runs reduced-but-faithful configurations suitable for
+the 1-core CPU container (DESIGN.md §7): identical fleet topology, compute
+gap and protocol as the paper, smaller models/rounds. ``--quick`` is the CI
+smoke (few rounds, subset of methods); ``--full`` is paper-scale. Underlying
+federated runs are cached under benchmarks/results/runs/, so the suite is
+resumable and benches share runs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="override the per-mode default round count")
+    ap.add_argument("--only", default=None,
+                    help="comma list: motivation,main_b1,main_b2,ablation,"
+                         "sensitivity,convergence,permodality,device,"
+                         "roofline")
+    args = ap.parse_args()
+    # "standard" defaults are calibrated to this 1-core CPU container
+    # (protocol/fleet identical to the paper; --full restores paper scale)
+    rounds = args.rounds or (6 if args.quick else (200 if args.full else 8))
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    from benchmarks import (bench_ablation, bench_convergence,
+                            bench_device_profile, bench_main,
+                            bench_motivation, bench_permodality,
+                            bench_roofline, bench_sensitivity)
+
+    t0 = time.time()
+    print(f"[benchmarks.run] mode="
+          f"{'quick' if args.quick else 'full' if args.full else 'standard'}")
+    if want("motivation"):
+        bench_motivation.run(rounds=min(rounds, 24), quick=args.quick)
+    if want("main_b1"):
+        bench_main.run("b1", rounds=rounds, quick=args.quick)
+    if want("main_b2"):
+        bench_main.run("b2", rounds=max(rounds * 2 // 3, 4),
+                       quick=args.quick)
+    if want("ablation"):
+        bench_ablation.run(rounds=rounds, quick=args.quick)
+    if want("sensitivity"):
+        bench_sensitivity.run(rounds=max(rounds * 2 // 3, 4),
+                              quick=args.quick)
+    if want("convergence"):
+        bench_convergence.run(rounds=rounds, quick=args.quick)
+    if want("permodality"):
+        bench_permodality.run(rounds=rounds, quick=args.quick)
+    if want("device"):
+        bench_device_profile.run(rounds=max(rounds * 2 // 3, 4),
+                                 quick=args.quick)
+    if want("roofline"):
+        try:
+            bench_roofline.run("single")
+            bench_roofline.run("multi")
+        except Exception as e:  # dry-run results may not exist yet
+            print(f"[roofline] skipped: {e}")
+    print(f"[benchmarks.run] done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

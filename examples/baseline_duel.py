@@ -1,0 +1,52 @@
+"""Head-to-head: all 11 federated methods on one fleet (reduced Table I).
+
+  PYTHONPATH=src python examples/baseline_duel.py [--rounds 10]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core.engine import FedConfig, FedRun
+from repro.core.strategies import ALL_BASELINES, get_strategy
+from repro.core.tasks import MMTask
+from repro.data import make_har_dataset, mm_config_for
+from repro.sim import make_fleet
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--dataset", default="pamap2")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    ds = make_har_dataset(args.dataset, windows_per_subject=120,
+                          seed=args.seed)
+    n_low = 2 if args.dataset == "pamap2" else 4
+    fleet = make_fleet(3, 3, n_low, M=4)
+    cfg = mm_config_for(args.dataset, backbone="cnn", d_feat=16, d_fused=64,
+                        cnn_ch=(16, 32))
+    task, tr0 = MMTask.create(cfg, jax.random.PRNGKey(args.seed))
+    fed = FedConfig(rounds=args.rounds, eval_every=args.rounds,
+                    utilization=2e-5, seed=args.seed)
+
+    rows = []
+    for name in list(ALL_BASELINES) + ["relief"]:
+        run = FedRun.create(task, tr0, get_strategy(name), fleet, fed)
+        h = run.run(ds)
+        rows.append((name, h["f1"][-1], float(np.mean(h["round_time_s"])),
+                     float(np.mean(h["energy_j"])),
+                     float(np.mean(h["upload_mb"]))))
+        print(f"  {name:12s} F1 {rows[-1][1]:.3f} t/r {rows[-1][2]:.2f}s")
+
+    base_t = next(r[2] for r in rows if r[0] == "fedavg")
+    print(f"\n{'method':14s}{'F1':>7s}{'t/r':>8s}{'speedup':>9s}"
+          f"{'J/r':>8s}{'MB/r':>7s}")
+    for name, f1, t, e, mb in sorted(rows, key=lambda r: -r[1]):
+        print(f"{name:14s}{f1:7.3f}{t:8.2f}{base_t / t:9.2f}x{e:8.0f}"
+              f"{mb:7.2f}")
+
+
+if __name__ == "__main__":
+    main()

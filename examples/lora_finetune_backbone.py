@@ -1,0 +1,67 @@
+"""LoRA fine-tune an assigned backbone on a synthetic token stream with the
+production train_step (Adam + grad clip + checkpoint/restart) — the same
+function the dry-run lowers for the 512-chip mesh, here on the host devices.
+
+  PYTHONPATH=src python examples/lora_finetune_backbone.py \
+      --arch gemma2-27b --steps 30
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import base
+from repro.data.tokens import synthetic_token_batches
+from repro.launch import step_fns as SF
+from repro.models import api
+from repro.optim import adam_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-27b", choices=base.list_archs())
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/lora_ft_ckpt")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = base.get_arch(args.arch).SMOKE
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init_model(key, cfg)
+    tr, _ = SF.split_trainable(params, "lora")
+    n_tr = sum(x.size for x in jax.tree.leaves(tr))
+    n_all = api.param_count(params)
+    print(f"[lora-ft] {args.arch} smoke: {n_all:,} params, {n_tr:,} "
+          f"trainable LoRA ({100 * n_tr / n_all:.2f}%)")
+
+    opt = adam_init(tr)
+    step_fn = jax.jit(SF.make_train_step(cfg, lr=args.lr, train_mode="lora"))
+    ckpt = CheckpointManager(args.ckpt_dir, keep=1)
+
+    losses = []
+    t0 = time.time()
+    for i, b in enumerate(synthetic_token_batches(
+            cfg.vocab, args.batch, args.seq, args.steps, seed=args.seed,
+            n_codebooks=cfg.n_codebooks)):
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros((args.batch, cfg.n_patches,
+                                          cfg.d_model))
+        params, opt, m = step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+        if (i + 1) % 10 == 0:
+            print(f"[lora-ft] step {i + 1:3d} loss {losses[-1]:.4f} "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)")
+            ckpt.save(i + 1, {"lora": params["lora"]})
+    print(f"[lora-ft] loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(improved {losses[0] - losses[-1]:.3f})")
+    assert losses[-1] < losses[0], "LoRA fine-tuning should reduce loss"
+
+
+if __name__ == "__main__":
+    main()

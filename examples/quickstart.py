@@ -1,0 +1,63 @@
+"""Quickstart: RELIEF vs FedAvg on a synthetic PAMAP2 fleet in ~2 minutes.
+
+Runs the paper's core comparison end-to-end: 8 heterogeneous clients
+(3 full-modality fast, 3 dual-modality mid, 2 single-modality slow), the
+lightweight-CNN backbone, 12 federated rounds — and prints F1, simulated
+round time, energy and upload volume for both methods.
+
+  PYTHONPATH=src python examples/quickstart.py [--rounds 12]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core.engine import FedConfig, FedRun
+from repro.core.strategies import get_strategy
+from repro.core.tasks import MMTask
+from repro.data import make_har_dataset, mm_config_for
+from repro.sim import make_fleet
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    print("=> synthesizing PAMAP2-like data (4 modalities, 12 activities)")
+    ds = make_har_dataset("pamap2", windows_per_subject=160, seed=args.seed)
+    fleet = make_fleet(3, 3, 2, M=4)  # paper's coupled cost gradient
+    print(f"   fleet: {fleet.type_names} (TOPS: {fleet.tops.tolist()})")
+
+    cfg = mm_config_for("pamap2", backbone="cnn", d_feat=16, d_fused=64,
+                        cnn_ch=(16, 32))
+    task, tr0 = MMTask.create(cfg, jax.random.PRNGKey(args.seed))
+    print(f"   parameter groups (G={task.layout.G}): {task.layout.names}")
+
+    fed = FedConfig(rounds=args.rounds, eval_every=max(args.rounds // 4, 1),
+                    utilization=2e-5, seed=args.seed)
+    results = {}
+    for name in ("fedavg", "relief"):
+        print(f"=> training with {name}")
+        run = FedRun.create(task, tr0, get_strategy(name), fleet, fed)
+        h = run.run(ds, log_every=max(args.rounds // 4, 1))
+        results[name] = h
+
+    fa, rl = results["fedavg"], results["relief"]
+    t_fa, t_rl = np.mean(fa["round_time_s"]), np.mean(rl["round_time_s"])
+    e_fa, e_rl = np.mean(fa["energy_j"]), np.mean(rl["energy_j"])
+    print("\n================ quickstart summary ================")
+    print(f"{'':14s}{'FedAvg':>10s}{'RELIEF':>10s}")
+    print(f"{'macro-F1':14s}{fa['f1'][-1]:>10.3f}{rl['f1'][-1]:>10.3f}")
+    print(f"{'round time':14s}{t_fa:>9.2f}s{t_rl:>9.2f}s"
+          f"   (speedup {t_fa / t_rl:.2f}x)")
+    print(f"{'fleet energy':14s}{e_fa:>9.0f}J{e_rl:>9.0f}J"
+          f"   (saving {100 * (1 - e_rl / e_fa):.0f}%)")
+    print(f"{'upload':14s}{np.mean(fa['upload_mb']):>8.2f}MB"
+          f"{np.mean(rl['upload_mb']):>8.2f}MB")
+    assert t_rl < t_fa, "RELIEF should beat FedAvg on round time"
+
+
+if __name__ == "__main__":
+    main()

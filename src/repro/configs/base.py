@@ -1,0 +1,168 @@
+"""Config dataclasses + the architecture registry.
+
+``ModelConfig`` is the single source of truth a model family reads; each
+assigned architecture file (``src/repro/configs/<id>.py``) exports
+
+  FULL   : the exact published configuration (dry-run / roofline only)
+  SMOKE  : a reduced same-family configuration (CPU smoke tests)
+  input_specs(shape) : jax.ShapeDtypeStruct stand-ins for every model input
+
+Shapes are the four assigned input regimes; ``long_500k`` cells that are
+architecturally infeasible (pure full attention) are marked ``supported=False``
+and justified in DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio | multimodal
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab: int = 0
+    activation: str = "silu"
+    rope_theta: float = 10000.0
+    sliding_window: int | None = None
+    layer_pattern: str = "global"  # global | local | alternating(local,global)
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    query_scale: float | None = None
+    post_norms: bool = False
+    tie_embeddings: bool = True
+    norm: str = "rmsnorm"
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_impl: str = "sparse"  # sparse (per-seq dispatch) | dense (GSPMD)
+    # SSM (mamba-2 SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    d_inner: int = 0
+    conv_kernel: int = 4
+    ssd_chunk: int = 256
+    # audio (musicgen): parallel codebook streams
+    n_codebooks: int = 0
+    # vlm (llava): number of image patch embeddings prepended (frontend stub)
+    n_patches: int = 0
+    # LoRA (RELIEF operates on these)
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    lora_targets: tuple[str, ...] = ("wq", "wv", "wo_fusion")
+    # numerics / execution
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    lora_dtype: str = "float32"
+    q_chunk: int = 1024
+    attn_impl: str = "xla"  # xla | pallas
+    # scan over layers (O(1) HLO, fast compile) vs unrolled (exact
+    # cost_analysis — XLA counts while bodies once; the dry-run unrolls)
+    scan_layers: bool = True
+    remat: str = "dots"  # none | dots | full
+    # sequence parallelism (Megatron-SP): residual stream sharded over the
+    # `model` axis between TP regions (all-reduce -> reduce-scatter +
+    # all-gather; saved activations shrink by the TP degree)
+    seq_shard: bool = False
+    # CE loss computed in S-chunks (bounds the [B,S,V] logits transient for
+    # 100k-256k vocabs); 1 = off
+    loss_chunks: int = 1
+    fsdp: bool = False  # shard base params over the data axis in training
+    quantize_serve: bool = False  # int8 base weights on the serve path
+    kv_quant: bool = False  # int8 KV cache with per-token scales (serving)
+
+    @property
+    def heads_per_group(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def runtime_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def p_dtype(self):
+        return jnp.bfloat16 if self.param_dtype == "bfloat16" else jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+_REGISTRY: dict[str, Any] = {}
+
+
+def register(arch_id: str, module) -> None:
+    _REGISTRY[arch_id] = module
+
+
+def get_arch(arch_id: str):
+    if not _REGISTRY:
+        _load_all()
+    return _REGISTRY[arch_id]
+
+
+def list_archs() -> list[str]:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all() -> None:
+    import importlib
+
+    for name in (
+        "phi3_medium_14b", "gemma2_27b", "granite_34b", "granite_3_8b",
+        "llava_next_34b", "musicgen_large", "mixtral_8x7b", "mixtral_8x22b",
+        "mamba2_1_3b", "hymba_1_5b", "relief_har",
+    ):
+        importlib.import_module(f"repro.configs.{name}")
+
+
+# ---------------------------------------------------------------------------
+# shared input_specs helpers
+# ---------------------------------------------------------------------------
+
+
+def lm_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for an LM step (no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token against a cache of S tokens
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def supports(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k requires sub-quadratic attention (bounded KV or SSM state)."""
+    if shape.name != "long_500k":
+        return True
+    if cfg.family in ("ssm", "hybrid"):
+        return True
+    # sliding-window (rolling KV) or alternating local/global qualify
+    return cfg.sliding_window is not None

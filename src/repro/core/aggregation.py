@@ -1,0 +1,94 @@
+"""Server-side aggregation rules.
+
+* ``cohort_weights`` + ``aggregate``   — RELIEF (paper Eq. 3-4): each group is
+  averaged only over the clients that trained it; the shared fusion
+  projection B uses normalized modality-count weighting; the head averages
+  over its uploaders. All three rules collapse into one [N, G] weight matrix
+  consumed by ``mdlora.weighted_combine`` — on a TPU mesh this is a single
+  masked reduce over the client axis.
+* ``fedavg_weights``                   — naive FedAvg over all N participants
+  (zero-padded deltas included): the paper's interference-prone baseline.
+* ``lemma1_decomposition``             — the bias^2/variance/interference
+  split of Lemma 1, used by diagnostics and tests.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mdlora
+
+Array = jax.Array
+
+
+def cohort_weights(layout: mdlora.GroupLayout, trained: Array,
+                   modality_mask: Array) -> Array:
+    """RELIEF combine weights W: [N, G].
+
+    trained: [N, G] float/bool — which groups each client trained+uploaded
+    (the active cohort C~_m^r for fusion blocks / encoders).
+    modality_mask: [N, M] — possession, for Eq. 4's w_n = (|M_n|/M)/sum(...).
+    Empty cohort => all-zero column (the block stays frozen this round).
+    """
+    trained = jnp.asarray(trained, jnp.float32)
+    M = layout.n_modalities
+    mcount = jnp.sum(jnp.asarray(modality_mask, jnp.float32), axis=1)  # [N]
+    kinds = np.array(layout.kinds)
+    is_b = jnp.asarray(kinds == mdlora.KIND_FUSION_B)  # [G]
+
+    u = jnp.where(is_b[None, :], (mcount / M)[:, None], 1.0)  # [N, G]
+    w = trained * u
+    denom = jnp.sum(w, axis=0, keepdims=True)  # [1, G]
+    return jnp.where(denom > 0, w / jnp.maximum(denom, 1e-12), 0.0)
+
+
+def fedavg_weights(n_clients: int, G: int, participating: Array | None = None
+                   ) -> Array:
+    """Naive FedAvg: every participant weighted 1/N for every group."""
+    if participating is None:
+        participating = jnp.ones((n_clients,), jnp.float32)
+    p = jnp.asarray(participating, jnp.float32)
+    return jnp.tile((p / jnp.maximum(jnp.sum(p), 1.0))[:, None], (1, G))
+
+
+def aggregate(layout: mdlora.GroupLayout, global_trainable: Any,
+              deltas: Any, W: Array, server_lr: float = 1.0) -> Any:
+    """theta^{r+1} = theta^r + server_lr * sum_n W[n,g] * delta_n (Eq. 3)."""
+    agg = mdlora.weighted_combine(layout, deltas, W)
+    return jax.tree.map(
+        lambda t, d: (t.astype(jnp.float32) + server_lr * d).astype(t.dtype),
+        global_trainable, agg)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 1 diagnostics
+# ---------------------------------------------------------------------------
+
+
+def lemma1_decomposition(block_deltas: Array, cohort: Array) -> dict:
+    """Empirical version of Lemma 1 for one fusion block.
+
+    block_deltas: [N, d, r] per-client updates to one block A_m.
+    cohort: [N] bool — C_m (possession).
+    Returns the scaling/interference/intra-cohort terms and the exact FedAvg
+    error; tests assert error <= sum of bound terms (Eq. 12-13).
+    """
+    c = jnp.asarray(cohort, jnp.float32)
+    N = block_deltas.shape[0]
+    nC = jnp.sum(c)
+    g_bar = jnp.einsum("n,n...->...", c / jnp.maximum(nC, 1.0), block_deltas)
+    g_hat = jnp.mean(block_deltas, axis=0)  # FedAvg over all N
+    eps_hat = jnp.einsum("n,n...->...", (1 - c) / jnp.maximum(N - nC, 1.0),
+                         block_deltas)
+    err = jnp.sum(jnp.square(g_hat - g_bar))
+    scaling = (1 - nC / N) ** 2 * jnp.sum(jnp.square(g_bar))
+    interference = ((N - nC) / N) ** 2 * jnp.sum(jnp.square(eps_hat))
+    intra = jnp.einsum("n,n->", c / jnp.maximum(nC, 1.0),
+                       jnp.sum(jnp.square(block_deltas - g_bar),
+                               axis=tuple(range(1, block_deltas.ndim))))
+    return {"error": err, "scaling": scaling, "interference": interference,
+            "intra_cohort": intra,
+            "bound": 2 * scaling + 2 * interference + intra / jnp.maximum(nC, 1.0)}

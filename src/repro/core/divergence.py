@@ -1,0 +1,66 @@
+"""Cohort-internal divergence tracking (paper Eq. 5-6).
+
+d_j^r = (1/|C_j|) * sum_{n in C_j} || delta_{j,n} - mean_{C_j}(delta_j) ||_F^2
+
+computed per parameter group in one pass over the stacked client deltas, then
+EMA-smoothed (Eq. 6). On the TPU mesh this is the fused masked-variance
+reduction implemented by kernels/cohort_agg; here is the XLA/reference path.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mdlora
+
+Array = jax.Array
+
+
+def group_divergence(layout: mdlora.GroupLayout, deltas: Any,
+                     cohort: Array) -> Array:
+    """deltas: client-stacked trainable pytree ([N, ...] leaves);
+    cohort: [N, G] bool/float — who contributes to each group's estimate.
+    -> [G] float32 divergences."""
+    c = jnp.asarray(cohort, jnp.float32)
+    counts = jnp.sum(c, axis=0)  # [G]
+    Wmean = jnp.where(counts[None, :] > 0,
+                      c / jnp.maximum(counts[None, :], 1.0), 0.0)
+    mean_tree = mdlora.weighted_combine(layout, deltas, Wmean)
+
+    # sum over cohort of ||delta_n - mean||^2, per group
+    dev = jax.tree.map(
+        lambda d, m: d.astype(jnp.float32) - m[None], deltas, mean_tree)
+    # per-client per-group squared norms
+    per_client = jax.vmap(lambda t: mdlora.group_norms(layout, t))(dev)  # [N,G]
+    tot = jnp.sum(per_client * c, axis=0)
+    return jnp.where(counts > 0, tot / jnp.maximum(counts, 1.0), 0.0)
+
+
+def ema_update(dbar: Array, d: Array, gamma: float) -> Array:
+    """Eq. 6: dbar^r = gamma*d^r + (1-gamma)*dbar^{r-1}."""
+    return gamma * d + (1.0 - gamma) * dbar
+
+
+def ema_bias_bound(gamma: float, delta_max: float) -> float:
+    """Steady-state EMA tracking bias bound (Prop. 5 / Eq. 21, CORRECTED).
+
+    Unrolling dbar^r = gamma * sum_s (1-gamma)^s d^{r-s} and using
+    |d^{r-s} - d^r| <= s*delta gives
+        |dbar - d| <= gamma*delta * sum_{s>=1} s(1-gamma)^s
+                    = gamma*delta * (1-gamma)/gamma^2 = delta*(1-gamma)/gamma.
+    The paper states gamma*delta/(1-gamma)^2, which mis-evaluates the
+    arithmetico-geometric series (sum s*x^s = x/(1-x)^2 evaluated at
+    x = 1-gamma); empirically the paper's constant is violated for
+    gamma < 1/2 (see tests/test_core_relief.py::test_ema_bias_bound and
+    EXPERIMENTS.md §Repro-findings). The O(sqrt(R)) regret *form* of
+    Prop. 5 is unaffected — only the constant changes.
+    """
+    return delta_max * (1.0 - gamma) / gamma
+
+
+def ema_bias_bound_paper(gamma: float, delta_max: float) -> float:
+    """The bound exactly as printed in the paper (Eq. 21) — kept for the
+    comparison test documenting the discrepancy."""
+    return gamma * delta_max / (1.0 - gamma) ** 2

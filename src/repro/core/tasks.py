@@ -1,0 +1,125 @@
+"""Task adapters binding a model to the federated engine.
+
+``MMTask`` wraps the paper's multimodal model (both backbones):
+  * Backbone 1 (cnn):  trainable = ALL parameters; the fusion FC weight is
+    the row-blocked leaf.
+  * Backbone 2 (transformer): frozen encoders; trainable = LoRA adapters +
+    task head; the fusion LoRA ``a`` is the row-blocked leaf.
+
+An adapter exposes: init_trainable, static, loss(trainable, batch), the
+GroupLayout, and evaluation helpers. The engine never touches model details.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mdlora
+from repro.core import metrics as M
+from repro.models import multimodal as MM
+
+Array = jax.Array
+
+
+def _split_b2(params: dict) -> tuple[dict, dict]:
+    """Backbone-2 trainable/static split."""
+    trainable = {"lora": params["lora"], "head": params["base"]["head"]}
+    static = {k: v for k, v in params["base"].items() if k != "head"}
+    return trainable, static
+
+
+def _merge_b2(trainable: dict, static: dict) -> dict:
+    return {"base": dict(static) | {"head": trainable["head"]},
+            "lora": trainable["lora"]}
+
+
+@dataclasses.dataclass
+class MMTask:
+    cfg: MM.MMConfig
+    static: Any
+    layout: mdlora.GroupLayout
+    _merge: Callable[[Any, Any], dict]
+
+    @classmethod
+    def create(cls, cfg: MM.MMConfig, key: Array) -> tuple["MMTask", Any]:
+        full_param = cfg.backbone == "cnn"
+        params = MM.init_mm_model(key, cfg)
+        if full_param:
+            # B1 trains everything; keep fusion LoRA out entirely
+            params.pop("lora", None)
+            trainable, static = params, {}
+            merge = lambda t, s: t
+        else:
+            trainable, static = _split_b2(params)
+            merge = _merge_b2
+        layout = mdlora.mm_group_layout(cfg, trainable)
+        task = cls(cfg, static, layout, merge)
+        layout.flops = task.group_compute_flops()  # per-example fwd FLOPs
+        return task, trainable
+
+    def params(self, trainable: Any) -> dict:
+        return self._merge(trainable, self.static)
+
+    def loss(self, trainable: Any, batch: dict) -> Array:
+        p = self.params(trainable)
+        logits = MM.mm_forward(p, self.cfg, batch["x"], batch["modality_mask"])
+        from repro.models import layers as L
+        return L.cross_entropy_logits(logits, batch["y"])
+
+    # -- evaluation ----------------------------------------------------------
+
+    def eval_f1(self, trainable: Any, xs, ys, modality_mask=None) -> float:
+        p = self.params(trainable)
+        mask = (np.ones((1, self.cfg.M), np.float32)
+                if modality_mask is None else modality_mask)
+        return M.evaluate_mm(p, self.cfg, xs, ys, mask)
+
+    def eval_per_modality(self, trainable: Any, xs, ys) -> dict[str, float]:
+        return M.per_modality_f1(self.params(trainable), self.cfg, xs, ys)
+
+    # -- cost model ------------------------------------------------------------
+
+    def group_compute_flops(self) -> np.ndarray:
+        """[G] per-example forward FLOPs attributable to each parameter
+        group (conv groups get their spatial reuse, unlike raw param counts).
+        This drives tau profiling (Eq. 7), the FLOP-proportional timing of
+        Sec. VI-A3 and the forward-aware model of Sec. VII."""
+        cfg, layout = self.cfg, self.layout
+        fl = np.zeros(layout.G)
+        for g, name in enumerate(layout.names):
+            if name.startswith("A_"):
+                m = next(m for m in cfg.modalities
+                         if m.name == name[2:])
+                fl[g] = 2.0 * m.d_feat * (cfg.lora_rank if cfg.backbone ==
+                                          "transformer" else cfg.d_fused)
+            elif name == "B_shared":
+                fl[g] = 2.0 * cfg.lora_rank * cfg.d_fused
+            elif name.startswith("E_") and cfg.backbone == "cnn":
+                label = name.split("_")[-1]
+                mname = name[2: -(len(label) + 1)]
+                m = next(mm for mm in cfg.modalities if mm.name == mname)
+                c1, c2 = cfg.cnn_ch
+                if label == "conv1":
+                    fl[g] = (cfg.window / 2) * cfg.cnn_kernel * m.channels * c1 * 2
+                elif label == "conv2":
+                    fl[g] = (cfg.window / 4) * cfg.cnn_kernel * c1 * c2 * 2
+                else:  # proj
+                    fl[g] = 2.0 * c2 * m.d_feat
+            elif name.startswith("E_"):  # transformer encoder LoRA layer
+                ntok = cfg.window // cfg.patch
+                fl[g] = ntok * (4 * cfg.enc_d**2 + 2 * cfg.enc_d * cfg.enc_ff
+                                + 2 * ntok * cfg.enc_d) * 2
+            elif name.startswith("H_"):
+                fl[g] = 2.0 * (cfg.d_fused * cfg.head_hidden
+                               if "w1" in name else
+                               cfg.head_hidden * cfg.n_classes)
+        return np.maximum(fl, 1.0)
+
+    def forward_flops_per_example(self) -> float:
+        """Fixed full-model forward cost (paid regardless of elastic masking
+        — zero-padded inputs still traverse every encoder)."""
+        return float(self.group_compute_flops().sum())

@@ -1,0 +1,3 @@
+from repro.data.har import (DATASETS, HARDataset, client_batches,
+                            make_har_dataset, mm_config_for)
+from repro.data.tokens import synthetic_token_batches

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the perf-critical compute layers (DESIGN.md §5):
+#   mdlora          fused block-masked LoRA projection (the paper's fusion op)
+#   cohort_agg      fused cohort-masked aggregation + divergence (Eq. 3 + 5)
+#   flash_attention online-softmax tiled attention (GQA/SWA/softcap variants)
+#   ssd             Mamba-2 SSD chunked scan
+# Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper
+# with impl switch), ref.py (pure-jnp oracle used by the tests).

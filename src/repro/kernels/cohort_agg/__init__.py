@@ -1,0 +1,1 @@
+from repro.kernels.cohort_agg.ops import cohort_agg_divergence

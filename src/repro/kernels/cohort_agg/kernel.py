@@ -1,0 +1,84 @@
+"""Fused cohort-masked aggregation + divergence statistics (Pallas).
+
+The server-side hot loop at fleet scale is a masked reduction over the client
+axis N of the stacked update tensor [N, D, r] — bandwidth-bound. This kernel
+streams the client axis through VMEM once, producing the Eq. 3 aggregate and
+the Eq. 5 sufficient statistics (sqsum, cohort mean, count) in the same pass,
+instead of the three separate reductions the naive implementation issues.
+
+Grid: (D/bd, N) — N innermost so accumulators stay resident in VMEM scratch;
+one [bd, r] tile of every client's delta is DMA'd per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(d_ref, w_ref, c_ref, agg_ref, sq_ref, mean_ref, cnt_ref,
+            acc_agg, acc_sq, acc_mean, acc_cnt, *, n_clients: int):
+    n_idx = pl.program_id(1)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        acc_agg[...] = jnp.zeros_like(acc_agg)
+        acc_sq[...] = jnp.zeros_like(acc_sq)
+        acc_mean[...] = jnp.zeros_like(acc_mean)
+        acc_cnt[...] = jnp.zeros_like(acc_cnt)
+
+    d = d_ref[0].astype(jnp.float32)  # [bd, r]
+    w = w_ref[0].astype(jnp.float32)  # [bd]
+    c = c_ref[0].astype(jnp.float32)  # [bd]
+    acc_agg[...] += d * w[:, None]
+    acc_sq[...] += c * jnp.sum(jnp.square(d), axis=1)
+    acc_mean[...] += d * c[:, None]
+    acc_cnt[...] += c
+
+    @pl.when(n_idx == n_clients - 1)
+    def _finish():
+        agg_ref[...] = acc_agg[...]
+        sq_ref[...] = acc_sq[...]
+        cnt = acc_cnt[...]
+        mean_ref[...] = acc_mean[...] / jnp.maximum(cnt, 1.0)[:, None]
+        cnt_ref[...] = cnt
+
+
+def cohort_agg_divergence_pallas(deltas, W, C, bd: int = 256,
+                                 interpret: bool = False):
+    N, D, r = deltas.shape
+    bd = min(bd, D)
+    assert D % bd == 0, (D, bd)
+    grid = (D // bd, N)
+    kernel = functools.partial(_kernel, n_clients=N)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd, r), lambda d, n: (n, d, 0)),
+            pl.BlockSpec((1, bd), lambda d, n: (n, d)),
+            pl.BlockSpec((1, bd), lambda d, n: (n, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bd, r), lambda d, n: (d, 0)),
+            pl.BlockSpec((bd,), lambda d, n: (d,)),
+            pl.BlockSpec((bd, r), lambda d, n: (d, 0)),
+            pl.BlockSpec((bd,), lambda d, n: (d,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((D, r), jnp.float32),
+            jax.ShapeDtypeStruct((D,), jnp.float32),
+            jax.ShapeDtypeStruct((D, r), jnp.float32),
+            jax.ShapeDtypeStruct((D,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bd, r), jnp.float32),
+            pltpu.VMEM((bd,), jnp.float32),
+            pltpu.VMEM((bd, r), jnp.float32),
+            pltpu.VMEM((bd,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(deltas, W, C)

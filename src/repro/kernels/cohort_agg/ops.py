@@ -1,0 +1,20 @@
+"""jit'd wrapper for the fused cohort aggregation + divergence kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.cohort_agg.kernel import cohort_agg_divergence_pallas
+from repro.kernels.cohort_agg.ref import cohort_agg_divergence_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret", "bd"))
+def cohort_agg_divergence(deltas, W, C, impl: str = "xla",
+                          interpret: bool = False, bd: int = 256):
+    """deltas [N, D, r], W [N, D] (Eq.3/4 weights), C [N, D] (Eq.5 cohort)
+    -> (agg [D,r], sqsum [D], mean [D,r], cnt [D])."""
+    if impl == "pallas":
+        return cohort_agg_divergence_pallas(deltas, W, C, bd=bd,
+                                            interpret=interpret)
+    return cohort_agg_divergence_ref(deltas, W, C)

@@ -1,0 +1,38 @@
+"""Oracle for the fused cohort aggregation + divergence pass.
+
+Inputs
+  deltas [N, D, r]  client-stacked updates (fusion ``a``-style leaf; any
+                    2-D trailing shape works, r may be 1)
+  W      [N, D]     per-(client,row) combine weights (Eq. 3/4 — rows of a
+                    block share the cohort weight; B-weighting folds in here)
+  C      [N, D]     divergence cohort mask (Eq. 5)
+Outputs
+  agg    [D, r]     sum_n W[n,d] * deltas[n,d,:]
+  sqsum  [D]        sum_n C[n,d] * ||deltas[n,d,:]||^2
+  wsum   [D, r]     sum_n (C[n,d]/cnt_d) * deltas[n,d,:]  (cohort mean)
+  cnt    [D]        sum_n C[n,d]
+
+Divergence per block m (Eq. 5) is then
+  d_m = sum_{d in block} sqsum[d]/cnt[d] - ||wsum[d]||^2.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cohort_agg_divergence_ref(deltas, W, C):
+    d32 = deltas.astype(jnp.float32)
+    W = W.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    agg = jnp.einsum("nd,ndr->dr", W, d32)
+    sqsum = jnp.einsum("nd,ndr->d", C, jnp.square(d32))
+    cnt = jnp.sum(C, axis=0)
+    mean = jnp.einsum("nd,ndr->dr", C, d32) / jnp.maximum(cnt, 1.0)[:, None]
+    return agg, sqsum, mean, cnt
+
+
+def divergence_from_stats(sqsum, mean, cnt, row_block_ids, n_blocks: int):
+    """Reduce row stats to per-block divergences (Eq. 5)."""
+    per_row = jnp.where(cnt > 0, sqsum / jnp.maximum(cnt, 1.0)
+                        - jnp.sum(jnp.square(mean), -1), 0.0)
+    return jnp.zeros(n_blocks, jnp.float32).at[row_block_ids].add(per_row)

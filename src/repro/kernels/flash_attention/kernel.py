@@ -1,0 +1,103 @@
+"""Online-softmax tiled attention (FlashAttention-style) for the GQA layout,
+with causal + sliding-window masking, ring-buffer cache positions and
+gemma-2 logit soft-capping.
+
+TPU adaptation (vs. the CUDA original): tiles are sized for VMEM (not SMEM),
+the contraction feeds the 128x128 MXU by folding the per-KV-group query
+heads G into the row dimension of the score matmul ([bq*G, hd] @ [hd, bt]),
+and the m/l/acc running state lives in VMEM scratch across the KV-tile grid
+steps (the TPU grid is executed sequentially, which replaces the CUDA
+thread-block software pipeline).
+
+Grid: (B, K, S/bq, T/bt) — KV tiles innermost.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, window: int,
+            softcap: float | None, n_kv: int):
+    t_idx = pl.program_id(3)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)  # [bq, G, hd]
+    bq, G, hd = q.shape
+    k = k_ref[0, :, 0].astype(jnp.float32)  # [bt, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)  # [bt, hd]
+    qpos = qpos_ref[...]  # [bq]
+    kpos = kpos_ref[...]  # [bt]
+
+    s = jnp.dot(q.reshape(bq * G, hd) * scale, k.T,
+                preferred_element_type=jnp.float32)  # [bq*G, bt]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.repeat(qpos, G)  # [bq*G]
+    mask = ((qp[:, None] >= kpos[None, :])
+            & ((qp[:, None] - kpos[None, :]) < window)
+            & (kpos >= 0)[None, :])
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)  # exp(NEG_INF - m) could be exp(0)=1 if row empty
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(t_idx == n_kv - 1)
+    def _finish():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, :, 0] = out.reshape(bq, G, hd).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, q_pos, kv_pos, window, softcap=None,
+                           bq: int = 512, bt: int = 512,
+                           interpret: bool = False):
+    """q: [B, S, K, G, hd]; k/v: [B, T, K, hd] -> [B, S, K, G, hd]."""
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    bq, bt = min(bq, S), min(bt, T)
+    assert S % bq == 0 and T % bt == 0, (S, T, bq, bt)
+    window = int(min(int(window), np.iinfo(np.int32).max))
+    grid = (B, K, S // bq, T // bt)
+    kern = functools.partial(_kernel, scale=1.0 / math.sqrt(hd),
+                             window=window, softcap=softcap, n_kv=T // bt)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, G, hd), lambda b, kh, i, j: (b, i, kh, 0, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda b, kh, i, j: (b, j, kh, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda b, kh, i, j: (b, j, kh, 0)),
+            pl.BlockSpec((bq,), lambda b, kh, i, j: (i,)),
+            pl.BlockSpec((bt,), lambda b, kh, i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, G, hd),
+                               lambda b, kh, i, j: (b, i, kh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G,), jnp.float32),
+            pltpu.VMEM((bq * G,), jnp.float32),
+            pltpu.VMEM((bq * G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_pos, kv_pos)

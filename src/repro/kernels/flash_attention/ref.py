@@ -1,0 +1,28 @@
+"""Oracle: exact attention over the GQA layout used by the model zoo.
+
+q: [B, S, K, G, hd]; k, v: [B, T, K, hd]; q_pos: [S]; kv_pos: [T]
+(-1 = empty cache slot); window: int (tokens; GLOBAL = i32 max);
+softcap: float | None.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, q_pos, kv_pos, window, softcap=None):
+    hd = q.shape[-1]
+    s = jnp.einsum("bqkgh,btkh->bqkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = kv_pos >= 0
+    causal = q_pos[:, None] >= kv_pos[None, :]
+    in_win = (q_pos[:, None] - kv_pos[None, :]) < window
+    mask = (causal & in_win & valid[None, :])[None, :, None, None, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqkgt,btkh->bqkgh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

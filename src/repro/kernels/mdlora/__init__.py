@@ -1,0 +1,1 @@
+from repro.kernels.mdlora.ops import mdlora_matmul

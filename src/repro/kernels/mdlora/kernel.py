@@ -1,0 +1,77 @@
+"""Fused block-masked LoRA projection as a Pallas TPU kernel.
+
+One pass over the D (contraction) axis accumulates BOTH the frozen base
+matmul x@W0 and the LoRA bottleneck u = x@a in VMEM scratch; the final grid
+step applies u @ b * scale into the output tile. The modality row-mask is
+folded into the x tile load, so absent-modality blocks cost no MXU work
+beyond the masked multiply (and, on the A side, allow XLA to skip dead
+blocks entirely when the mask is static).
+
+Tiling: grid = (T/bt, F/bf, D/bd); MXU-aligned tiles (128 multiples).
+VMEM working set per step: bt*bd (x) + bd*bf (w0) + bd*r (a) + bt*bf (acc)
++ bt*r (u) floats — e.g. bt=bf=bd=256, r<=64: ~0.8 MB, far under the
+~16 MB/core VMEM budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w0_ref, a_ref, b_ref, mask_ref, o_ref, acc_ref, u_ref, *,
+            scale: float, n_d: int):
+    d_idx = pl.program_id(2)
+
+    @pl.when(d_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    xm = x_ref[...].astype(jnp.float32) * mask_ref[...].astype(jnp.float32)[None, :]
+    acc_ref[...] += jnp.dot(xm, w0_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+    u_ref[...] += jnp.dot(xm, a_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(d_idx == n_d - 1)
+    def _finish():
+        lora = jnp.dot(u_ref[...], b_ref[...].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scale * lora).astype(o_ref.dtype)
+
+
+def mdlora_matmul_pallas(x, w0, a, b, row_mask, scale,
+                         bt: int = 256, bf: int = 256, bd: int = 256,
+                         interpret: bool = False):
+    """x: [T, D]; w0: [D, F]; a: [D, r]; b: [r, F]; row_mask: [D] -> [T, F]."""
+    T, D = x.shape
+    F = w0.shape[1]
+    r = a.shape[1]
+    bt, bf, bd = min(bt, T), min(bf, F), min(bd, D)
+    assert T % bt == 0 and F % bf == 0 and D % bd == 0, (T, F, D, bt, bf, bd)
+    n_d = D // bd
+
+    grid = (T // bt, F // bf, n_d)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=float(scale), n_d=n_d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bd), lambda i, j, k: (i, k)),  # x
+            pl.BlockSpec((bd, bf), lambda i, j, k: (k, j)),  # w0
+            pl.BlockSpec((bd, r), lambda i, j, k: (k, 0)),  # a
+            pl.BlockSpec((r, bf), lambda i, j, k: (0, j)),  # b
+            pl.BlockSpec((bd,), lambda i, j, k: (k,)),  # row_mask
+        ],
+        out_specs=pl.BlockSpec((bt, bf), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((T, F), x.dtype),
+        scratch_shapes=[
+            # fp32 accumulators live in VMEM across the D-axis grid steps
+            pltpu.VMEM((bt, bf), jnp.float32),
+            pltpu.VMEM((bt, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w0, a, b, row_mask)

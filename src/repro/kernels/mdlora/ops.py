@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the fused block-LoRA projection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.mdlora.kernel import mdlora_matmul_pallas
+from repro.kernels.mdlora.ref import mdlora_matmul_ref
+
+
+def block_row_mask(block_dims, modality_mask) -> jnp.ndarray:
+    """[M] modality availability -> [D] row mask over the fusion input."""
+    reps = np.asarray(block_dims, np.int32)
+    mm = jnp.asarray(modality_mask, jnp.float32)
+    return jnp.repeat(mm, jnp.asarray(reps), total_repeat_length=int(reps.sum()))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl", "interpret",
+                                             "bt", "bf", "bd"))
+def mdlora_matmul(x, w0, a, b, row_mask, scale: float = 2.0,
+                  impl: str = "xla", interpret: bool = False,
+                  bt: int = 256, bf: int = 256, bd: int = 256):
+    """y = (x*mask)@W0 + ((x*mask)@a)@b*scale.
+
+    impl="pallas" is the TPU deployment path (tests run it with
+    interpret=True); impl="xla" is the portable fallback the CPU dry-run
+    compiles.
+    """
+    if impl == "pallas":
+        return mdlora_matmul_pallas(x, w0, a, b, row_mask, scale,
+                                    bt=bt, bf=bf, bd=bd, interpret=interpret)
+    return mdlora_matmul_ref(x, w0, a, b, row_mask, scale)

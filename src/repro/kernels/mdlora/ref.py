@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused block-LoRA projection.
+
+    y = (x * row_mask) @ W0  +  ((x * row_mask) @ a) @ b * scale
+
+``row_mask`` ([D]) zeroes the input rows of absent modality blocks (Eq. 1/2:
+missing modalities contribute exactly nothing to the fusion layer, and their
+A-blocks receive zero gradient).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mdlora_matmul_ref(x, w0, a, b, row_mask, scale):
+    xm = x * row_mask[None, :].astype(x.dtype)
+    base = xm.astype(jnp.float32) @ w0.astype(jnp.float32)
+    lora = (xm.astype(jnp.float32) @ a.astype(jnp.float32)) @ \
+        b.astype(jnp.float32) * scale
+    return (base + lora).astype(x.dtype)

@@ -1,0 +1,98 @@
+"""Mamba-2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+The block decomposition (arXiv:2405.21060 §6) maps naturally onto the TPU:
+the intra-chunk term is a masked [Q, Q] matmul chain (MXU work), and the
+inter-chunk state recurrence is carried in VMEM scratch across sequential
+grid steps along the chunk axis — the Pallas/TPU grid executes in order, so
+the scratch state register replaces the CUDA kernel's cross-block semaphore
+chain (hardware adaptation note in DESIGN.md §3).
+
+Grid: (B, H/bh, S/Q) — chunks innermost; per-step working set
+~ Q*(bh*(p+1)+2n) + Q^2 + bh*p*n floats (Q=128, bh=8, p=64, n=128: ~0.6 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, fs_ref, state_ref,
+            *, n_chunks: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # [Q, bh, p]
+    dt = dt_ref[0].astype(jnp.float32)  # [Q, bh]
+    alog = alog_ref[...].astype(jnp.float32)  # [bh]
+    Bm = b_ref[0].astype(jnp.float32)  # [Q, n]
+    Cm = c_ref[0].astype(jnp.float32)  # [Q, n]
+    Q = x.shape[0]
+
+    a = -jnp.exp(alog)[None, :] * dt  # [Q, bh] log-decay
+    cum = jnp.cumsum(a, axis=0)  # [Q, bh]
+    xdt = x * dt[..., None]  # [Q, bh, p]
+
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # [Q, Q]
+    tril = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+    diff = cum[:, None, :] - cum[None, :, :]  # [Q, Q, bh]
+    Lmat = jnp.exp(jnp.where(tril[:, :, None], diff, NEG_INF))
+    y_diag = jnp.einsum("qk,qkh,khp->qhp", scores, Lmat, xdt)
+
+    state = state_ref[...]  # [bh, p, n]
+    state_out = jnp.exp(cum)  # [Q, bh] decay from chunk start
+    y_off = jnp.einsum("qn,hpn,qh->qhp", Cm, state, state_out)
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(cum[-1:, :] - cum)  # [Q, bh]
+    chunk_states = jnp.einsum("qn,qh,qhp->hpn", Bm, decay_to_end, xdt)
+    new_state = state * jnp.exp(cum[-1])[:, None, None] + chunk_states
+    state_ref[...] = new_state
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _finish():
+        fs_ref[0] = new_state
+
+
+def ssd_pallas(x, dt, A_log, Bm, Cm, chunk: int = 128, bh: int = 8,
+               interpret: bool = False):
+    """x: [b, s, h, p]; dt: [b, s, h]; A_log: [h]; Bm/Cm: [b, s, n]
+    -> (y [b, s, h, p], final_state [b, h, p, n])."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    bh = min(bh, h)
+    assert s % chunk == 0 and h % bh == 0, (s, chunk, h, bh)
+    n_chunks = s // chunk
+    grid = (b, h // bh, n_chunks)
+    kern = functools.partial(_kernel, n_chunks=n_chunks)
+    y, fs = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bh, p), lambda i, j, c: (i, c, j, 0)),
+            pl.BlockSpec((1, chunk, bh), lambda i, j, c: (i, c, j)),
+            pl.BlockSpec((bh,), lambda i, j, c: (j,)),
+            pl.BlockSpec((1, chunk, n), lambda i, j, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j, c: (i, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bh, p), lambda i, j, c: (i, c, j, 0)),
+            pl.BlockSpec((1, bh, p, n), lambda i, j, c: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bh, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A_log, Bm, Cm)
+    return y, fs

@@ -1,0 +1,11 @@
+"""Oracle for the SSD kernel: the chunked block decomposition from
+models/ssm.py is itself validated against the sequential recurrence, so the
+kernel oracle reuses it directly."""
+from __future__ import annotations
+
+from repro.models.ssm import ssd_chunked as _ssd_chunked_jnp
+
+
+def ssd_ref(x, dt, A_log, Bm, Cm, chunk, initial_state=None):
+    return _ssd_chunked_jnp(x, dt, A_log, Bm, Cm, chunk, initial_state,
+                            impl="xla")

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before any jax import.
+
+Mesh shapes (TPU v5e):
+  single-pod : (16, 16)    axes (data, model)        = 256 chips
+  multi-pod  : (2, 16, 16) axes (pod, data, model)   = 512 chips
+
+``data`` doubles as the FL client axis (DESIGN.md §3); ``pod`` is the
+cross-pod (DCN) data/client axis — hierarchical aggregation reduces within
+pods over ICI first, then across pods.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over the actually-available devices (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

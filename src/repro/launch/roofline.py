@@ -1,0 +1,144 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS        (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_device / HBM_BW            (819 GB/s)
+  collective = collective_bytes_per_device / LINK_BW    (~50 GB/s/link ICI)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are NOT
+in cost_analysis: we parse the optimized HLO, summing result sizes of every
+all-gather / all-reduce (x2: reduce+broadcast phases) / reduce-scatter /
+all-to-all / collective-permute. Collectives inside the layer-scan while
+loop appear once in the HLO text but execute once per scan step, so ops
+found outside the ENTRY computation are multiplied by the scan trip count
+(models here have exactly one depth-scan; documented limitation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s/link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Sum byte sizes of all array shapes in an HLO type string
+    (handles tuples like ``(f32[8,128], f32[8,128])``)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_entry: int
+    bytes_scanned: int  # inside while bodies (per trip)
+    counts: dict
+
+    def total(self, scan_steps: int) -> int:
+        return self.bytes_entry + self.bytes_scanned * max(scan_steps, 1)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_entry = 0
+    bytes_scanned = 0
+    counts: dict[str, int] = {}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("ENTRY "):
+            in_entry = True
+            continue
+        if in_entry and stripped == "}":
+            in_entry = False
+            continue
+        m = re.search(r"=\s*([^=]+?)\s+(" + "|".join(_COLLECTIVES)
+                      + r")(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        if "-done(" in stripped:
+            continue  # avoid double counting async start/done pairs
+        b = _type_bytes(m.group(1))
+        if op == "all-reduce":
+            b *= 2  # reduce + broadcast phases on a ring
+        counts[op] = counts.get(op, 0) + 1
+        if in_entry:
+            bytes_entry += b
+        else:
+            bytes_scanned += b
+    return CollectiveStats(bytes_entry, bytes_scanned, counts)
+
+
+def roofline_terms(cost: dict, hlo_text: str, scan_steps: int) -> dict:
+    """cost: compiled.cost_analysis() dict (per-device program)."""
+    coll = parse_collectives(hlo_text)
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.total(scan_steps))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = cbytes / LINK_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    return {
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": cbytes,
+        "collective_counts": coll.counts,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+    }
+
+
+def model_flops(cfg, shape, train_mode: str = "lora") -> dict:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), with the
+    LoRA-adjusted ideal (~4*N*D: frozen weights skip dW) reported alongside."""
+    from repro.models import api as mapi
+    import jax
+
+    params = jax.eval_shape(
+        lambda k: mapi.init_model(k, cfg), jax.random.PRNGKey(0))
+    n_total = sum(x.size for x in jax.tree.leaves(params["base"]))
+    if cfg.n_experts:
+        # active = non-expert params + top_k/n_experts of expert params
+        expert = sum(
+            x.size for p, x in
+            jax.tree_util.tree_flatten_with_path(params["base"])[0]
+            if re.search(r"\['(wi|wg|wo)'\]", jax.tree_util.keystr(p))
+            and x.ndim == 4)
+        n_active = n_total - expert + expert * cfg.top_k / cfg.n_experts
+    else:
+        n_active = n_total
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    factor = {"train": 6.0 if train_mode == "full" else 4.0,
+              "prefill": 2.0, "decode": 2.0}[shape.kind]
+    return {
+        "n_params": n_total, "n_active": n_active, "tokens": tokens,
+        "model_flops": factor * n_active * tokens,
+        "model_flops_6nd": 6.0 * n_active * tokens,
+    }

@@ -1,0 +1,72 @@
+"""Serving launcher: batched prefill + decode with a KV/SSM cache on the
+host mesh. Demonstrates the serve path end-to-end (continuous greedy decode
+over a batch of synthetic prompts) for any assigned architecture.
+
+Usage:
+  python -m repro.launch.serve --arch hymba-1.5b --smoke --prompt-len 64 \
+      --decode-steps 32 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import base
+    from repro.launch import step_fns as SF
+    from repro.models import api
+
+    mod = base.get_arch(args.arch)
+    cfg = mod.SMOKE if args.smoke else mod.FULL
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init_model(key, cfg)
+    B, P = args.batch, args.prompt_len
+    max_len = P + args.decode_steps
+
+    tok_shape = (B, P, cfg.n_codebooks) if cfg.n_codebooks else (B, P)
+    prompts = jax.random.randint(key, tok_shape, 0, cfg.vocab)
+
+    serve_step = jax.jit(SF.make_serve_step(cfg))
+    caches = api.init_caches(cfg, B, max_len)
+
+    # prefill token-by-token through the cache path (uniform across
+    # families; production prefill for attention archs uses the chunked
+    # forward — benchmarked in the dry-run's prefill cells)
+    t0 = time.time()
+    tok = prompts[:, :1]
+    for pos in range(P):
+        tok_in = prompts[:, pos:pos + 1]
+        tok, caches = serve_step(params, caches, tok_in, jnp.int32(pos))
+    t_prefill = time.time() - t0
+
+    out = []
+    t0 = time.time()
+    for pos in range(P, max_len):
+        tok, caches = serve_step(params, caches, tok, jnp.int32(pos))
+        out.append(tok)
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    tps = args.decode_steps * B / max(t_decode, 1e-9)
+    print(f"[serve] {args.arch}: prefill {P} toks in {t_prefill:.2f}s; "
+          f"decoded {args.decode_steps}x{B} in {t_decode:.2f}s "
+          f"({tps:.1f} tok/s)")
+    print("[serve] sample:", gen[0].reshape(-1)[:16].tolist())
+    assert bool(jnp.all(gen >= 0)) and bool(jnp.all(gen < cfg.vocab))
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Step functions lowered by the dry-run and executed by train.py/serve.py.
+
+  train_step    LoRA fine-tuning (paper setting; frozen base) or full-param,
+                Adam, grad-clip; returns (params, opt_state, metrics)
+  prefill_step  full forward, returns last-position logits
+  serve_step    one-token decode against the KV/SSM caches, greedy sample
+
+All are pure functions of (cfg,) closed over — the dry-run lowers them with
+ShapeDtypeStruct arguments and NamedSharding in_shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.optim import adam_init, adam_update
+
+Array = jax.Array
+
+
+def split_trainable(params: dict, mode: str) -> tuple[Any, Any]:
+    if mode == "lora":
+        return params["lora"], {"base": params["base"]}
+    return params, {}
+
+
+def merge_trainable(trainable: Any, rest: Any, mode: str) -> dict:
+    if mode == "lora":
+        return {"base": rest["base"], "lora": trainable}
+    return trainable
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 1e-3,
+                    train_mode: str = "lora", clip: float = 1.0):
+    def train_step(params: dict, opt_state: dict, batch: dict):
+        trainable, rest = split_trainable(params, train_mode)
+
+        def loss_fn(tr):
+            return api.loss_fn(merge_trainable(tr, rest, train_mode), cfg,
+                               batch)
+
+        loss, grads = jax.value_and_grad(loss_fn)(trainable)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        new_tr, new_opt = adam_update(trainable, grads, opt_state, lr)
+        return (merge_trainable(new_tr, rest, train_mode), new_opt,
+                {"loss": loss, "grad_norm": gnorm})
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params: dict, batch: dict):
+        # unembed ONLY the final position: full-sequence logits at 32k x
+        # 50-256k vocab dominated every prefill cell's memory/bytes
+        # (§Perf log, "global baseline fixes")
+        h, _, _ = api.forward_hidden(params, cfg, batch)
+        logits = api.TF.unembed(params, cfg, h[:, -1:])
+        return logits[:, 0]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params: dict, caches: Any, token: Array, pos: Array):
+        logits, new_caches = api.decode_step(params, cfg, caches, token, pos)
+        next_token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_token, new_caches
+
+    return serve_step
+
+
+def abstract_params(cfg: ModelConfig, with_lora: bool = True):
+    """ShapeDtypeStruct param tree — no allocation (dry-run)."""
+    return jax.eval_shape(
+        functools.partial(api.init_model, cfg=cfg, with_lora=with_lora),
+        jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(trainable_abstract):
+    return jax.eval_shape(adam_init, trainable_abstract)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        functools.partial(api.init_caches, cfg, batch, max_len))

@@ -1,0 +1,2 @@
+from repro.models.api import (decode_step, forward, init_caches, init_model,
+                              loss_fn, param_count)

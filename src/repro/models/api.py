@@ -1,0 +1,130 @@
+"""Family-dispatching model API — the single entry point used by training,
+serving, the federated engine and the dry-run launcher.
+
+  init_model(key, cfg)                  -> params {"base":..., "lora":...}
+  forward(params, cfg, batch)           -> (logits, aux_loss)
+  loss_fn(params, cfg, batch)           -> scalar loss
+  init_caches(cfg, batch_size, max_len) -> decode caches
+  decode_step(params, cfg, caches, token, pos) -> (logits, caches)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid as HY
+from repro.models import layers as L
+from repro.models import ssm as SM
+from repro.models import transformer as TF
+
+Array = jax.Array
+
+_TF_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+def init_model(key: Array, cfg: ModelConfig, with_lora: bool = True) -> dict:
+    if cfg.family in _TF_FAMILIES:
+        return TF.init_lm(key, cfg, with_lora)
+    if cfg.family == "ssm":
+        return SM.init_mamba_lm(key, cfg)
+    if cfg.family == "hybrid":
+        return HY.init_hybrid_lm(key, cfg, with_lora)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict) -> tuple[Array, Array]:
+    if cfg.family in _TF_FAMILIES:
+        logits, _, aux = TF.lm_forward(params, cfg, batch["tokens"],
+                                       patches=batch.get("patches"))
+    elif cfg.family == "ssm":
+        logits, _, aux = SM.mamba_forward(params, cfg, batch["tokens"])
+    elif cfg.family == "hybrid":
+        logits, _, aux = HY.hybrid_forward(params, cfg, batch["tokens"])
+    else:
+        raise ValueError(cfg.family)
+    return logits, aux
+
+
+def forward_hidden(params: dict, cfg: ModelConfig, batch: dict):
+    """Forward up to the final norm (pre-unembed). Used by chunked-CE
+    training and by prefill (which unembeds only the last position)."""
+    if cfg.family in _TF_FAMILIES:
+        return TF.lm_forward(params, cfg, batch["tokens"],
+                             patches=batch.get("patches"), skip_unembed=True)
+    if cfg.family == "ssm":
+        return SM.mamba_forward(params, cfg, batch["tokens"],
+                                skip_unembed=True)
+    if cfg.family == "hybrid":
+        return HY.hybrid_forward(params, cfg, batch["tokens"],
+                                 skip_unembed=True)
+    raise ValueError(cfg.family)
+
+
+def chunked_ce(params: dict, cfg: ModelConfig, h: Array, labels: Array,
+               n_chunks: int) -> Array:
+    """CE over vocab computed per sequence-chunk: the [B, S, V] logits
+    transient shrinks to [B, S/n_chunks, V] (production large-vocab path)."""
+    from repro.models import transformer as TF
+
+    B, S, _ = h.shape
+    assert S % n_chunks == 0, (S, n_chunks)
+    hc = h.reshape(B, n_chunks, S // n_chunks, -1).transpose(1, 0, 2, 3)
+    tail = labels.shape[2:]  # audio: [B, S, n_codebooks]
+    lc = labels.reshape(B, n_chunks, S // n_chunks, *tail)
+    lc = jnp.moveaxis(lc, 1, 0)
+
+    def one(c, args):
+        hi, li = args
+        logits = TF.unembed(params, cfg, hi)
+        return c + L.cross_entropy_logits(logits, li), None
+
+    total, _ = jax.lax.scan(one, jnp.float32(0.0), (hc, lc))
+    return total / n_chunks
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict,
+            aux_weight: float = 0.01) -> Array:
+    labels = batch["labels"]
+    if cfg.loss_chunks > 1 and cfg.family in _TF_FAMILIES:
+        from repro.models import transformer as TF
+        h, _, aux = TF.lm_forward(params, cfg, batch["tokens"],
+                                  patches=batch.get("patches"),
+                                  skip_unembed=True)
+        if "patches" in batch and batch["patches"] is not None:
+            h = h[:, batch["patches"].shape[1]:]
+        return chunked_ce(params, cfg, h, labels, cfg.loss_chunks) \
+            + aux_weight * aux
+    logits, aux = forward(params, cfg, batch)
+    if "patches" in batch and batch["patches"] is not None:
+        # llava: loss only over the text positions (after the patch prefix)
+        n_patch = batch["patches"].shape[1]
+        logits = logits[:, n_patch:]
+    return L.cross_entropy_logits(logits, labels) + aux_weight * aux
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    if cfg.family in _TF_FAMILIES:
+        return TF.init_kv_caches(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return SM.init_mamba_caches(cfg, batch, max_len)
+    if cfg.family == "hybrid":
+        return HY.init_hybrid_caches(cfg, batch, max_len)
+    raise ValueError(cfg.family)
+
+
+def decode_step(params: dict, cfg: ModelConfig, caches: Any, token: Array,
+                pos: Array) -> tuple[Array, Any]:
+    if cfg.family in _TF_FAMILIES:
+        return TF.lm_decode_step(params, cfg, caches, token, pos)
+    if cfg.family == "ssm":
+        return SM.mamba_decode_step(params, cfg, caches, token, pos)
+    if cfg.family == "hybrid":
+        return HY.hybrid_decode_step(params, cfg, caches, token, pos)
+    raise ValueError(cfg.family)
+
+
+def param_count(params: Any) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

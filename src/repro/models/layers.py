@@ -1,0 +1,296 @@
+"""Core neural-net building blocks, pure JAX (no flax).
+
+Every block is a pair of functions:
+  init_<block>(key, cfg, ...) -> param pytree (dicts of jnp arrays)
+  <block>(params, x, ...)     -> output
+
+Conventions
+-----------
+* Weights are stored as [in_dim, out_dim] so forward is ``x @ w``.
+* Layer-stacked parameters carry a leading [L, ...] axis and are consumed by
+  ``jax.lax.scan`` in the model files.
+* ``cfg.dtype`` is the activation/compute dtype (bf16 on TPU, fp32 for tiny
+  CPU tests); norm statistics and softmax accumulate in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: Array, in_dim: int, out_dim: int, dtype=jnp.float32) -> Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, dim: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32) -> Array:
+    return jnp.zeros((dim,), dtype=dtype)  # gemma-style (1 + w) parameterization
+
+
+def rmsnorm(w: Array, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype=dtype), "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layernorm(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)  # [head_dim/2]
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# soft capping (gemma-2)
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: Array, cap: float | None) -> Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+
+
+def init_attention(key: Array, dims: AttnDims, dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, k, hd = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.head_dim
+    return {
+        "wq": dense_init(kq, d, h * hd, dtype),
+        "wk": dense_init(kk, d, k * hd, dtype),
+        "wv": dense_init(kv, d, k * hd, dtype),
+        "wo": dense_init(ko, h * hd, d, dtype),
+    }
+
+
+def _chunked_attention(
+    q: Array,  # [B, S, K, G, hd]  (G = heads per kv group)
+    k: Array,  # [B, T, K, hd]
+    v: Array,  # [B, T, K, hd]
+    q_positions: Array,  # [S] absolute positions of queries
+    kv_positions: Array,  # [T] absolute positions of keys (−1 ⇒ empty slot)
+    window: Array | int | None,  # sliding window size (tokens), None = global
+    attn_softcap_val: float | None,
+    q_chunk: int,
+) -> Array:
+    """Causal (optionally sliding-window) attention, chunked over queries.
+
+    Never materializes the full [S, T] score matrix — peak live memory is
+    [B, q_chunk, K, G, T] per chunk, which bounds compile-time memory analysis
+    at 32k prefill. FLOPs are identical to the naive einsum. Works for decode
+    (S=1) and prefill (S=T) alike.
+    """
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    if window is None:
+        window = jnp.array(np.iinfo(np.int32).max, dtype=jnp.int32)
+    window = jnp.asarray(window, dtype=jnp.int32)
+
+    q_chunk = min(q_chunk, S)
+    n_chunks = S // q_chunk
+    assert S % q_chunk == 0, f"S={S} not divisible by q_chunk={q_chunk}"
+
+    qr = q.reshape(B, n_chunks, q_chunk, K, G, hd)
+    qpr = q_positions.reshape(n_chunks, q_chunk)
+
+    def one_chunk(qc, qpos):
+        # qc: [B, qc, K, G, hd]; qpos: [qc]
+        s = jnp.einsum("bqkgh,btkh->bqkgt", qc.astype(jnp.float32) * scale,
+                       k.astype(jnp.float32))
+        s = softcap(s, attn_softcap_val)
+        valid = kv_positions >= 0  # [T]
+        causal = qpos[:, None] >= kv_positions[None, :]  # [qc, T]
+        in_window = (qpos[:, None] - kv_positions[None, :]) < window
+        mask = (causal & in_window & valid[None, :])[None, :, None, None, :]
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bqkgt,btkh->bqkgh", p, v.astype(jnp.float32))
+        return o.astype(q.dtype)
+
+    if n_chunks == 1:
+        out = one_chunk(qr[:, 0], qpr[0])[:, None]
+    else:
+        out = jax.lax.map(lambda args: one_chunk(*args),
+                          (qr.transpose(1, 0, 2, 3, 4, 5), qpr))
+        out = out.transpose(1, 0, 2, 3, 4, 5)
+    return out.reshape(B, S, K, G, hd)
+
+
+def attention(
+    p: dict,
+    dims: AttnDims,
+    x: Array,  # [B, S, d]
+    positions: Array,  # [S]
+    *,
+    kv_cache: dict | None = None,  # {"k","v": [B, T, K, hd], "pos": [T]}
+    window: Array | int | None = None,
+    rope_theta: float = 10000.0,
+    attn_softcap_val: float | None = None,
+    query_scale: float | None = None,
+    q_chunk: int = 1024,
+    attn_impl: str = "xla",
+) -> tuple[Array, dict | None]:
+    """Multi-head attention with GQA, RoPE, sliding window and softcap.
+
+    When ``kv_cache`` is given, the new k/v are written at ``positions`` within
+    the cache ring and attention runs over the cache (decode / chunked
+    prefill); otherwise self-attention over ``x`` (training / full prefill).
+    Returns (output, updated_cache).
+    """
+    B, S, d = x.shape
+    H, K, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    G = H // K
+
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, K, hd)
+    v = (x @ p["wv"]).reshape(B, S, K, hd)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    if query_scale is not None:
+        # e.g. gemma-2 query_pre_attn_scalar: replaces the default 1/sqrt(hd)
+        q = q * (query_scale * math.sqrt(hd))
+
+    new_cache = None
+    if kv_cache is None:
+        kk, vv, kv_pos = k, v, positions
+    else:
+        T = kv_cache["k"].shape[1]
+        slots = positions % T  # ring buffer (rolling window when T == window)
+        kk = kv_cache["k"].at[:, slots].set(k)
+        vv = kv_cache["v"].at[:, slots].set(v)
+        kv_pos = kv_cache["pos"].at[slots].set(positions)
+        new_cache = {"k": kk, "v": vv, "pos": kv_pos}
+
+    qg = q.reshape(B, S, K, G, hd)
+    if attn_impl == "pallas":  # TPU deployment path (tests use interpret mode)
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        o = fa_ops.flash_attention(qg, kk, vv, positions, kv_pos, window,
+                                   attn_softcap_val)
+    else:
+        o = _chunked_attention(qg, kk, vv, positions, kv_pos, window,
+                               attn_softcap_val, q_chunk)
+    o = o.reshape(B, S, H * hd)
+    return o @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_glu_mlp(key: Array, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    ki, kg, ko = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ki, d_model, d_ff, dtype),
+        "wg": dense_init(kg, d_model, d_ff, dtype),
+        "wo": dense_init(ko, d_ff, d_model, dtype),
+    }
+
+
+def glu_mlp(p: dict, x: Array, activation: str = "silu", hint=None) -> Array:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[activation]
+    g, u = x @ p["wg"], x @ p["wi"]
+    if hint is not None:  # TP: hidden dim sharded over `model`
+        g, u = hint(g), hint(u)
+    return (act(g) * u) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy_logits(logits: Array, labels: Array, mask: Array | None = None) -> Array:
+    """Mean token cross-entropy; logits [..., V], labels [...] int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# 1-D CNN encoder (paper Backbone 1)
+# ---------------------------------------------------------------------------
+
+
+def init_conv1d(key: Array, in_ch: int, out_ch: int, ksize: int, dtype=jnp.float32) -> dict:
+    scale = 1.0 / math.sqrt(in_ch * ksize)
+    w = jax.random.normal(key, (ksize, in_ch, out_ch)) * scale
+    return {"w": w.astype(dtype), "b": jnp.zeros((out_ch,), dtype=dtype)}
+
+
+def conv1d(p: dict, x: Array, stride: int = 1) -> Array:
+    """x: [B, T, C_in] -> [B, T', C_out] (SAME padding)."""
+    out = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return out + p["b"]

@@ -1,0 +1,132 @@
+"""Mixtral-style sparse MoE MLP (top-k routing over SwiGLU experts).
+
+Dispatch is sort-based with a fixed per-shard capacity: the (token, expert)
+assignments are sorted by expert id and gathered into an [E*C, d] buffer, so
+expert compute is a single grouped matmul whose FLOPs equal the *active*
+expert FLOPs (× capacity_factor) — no [tokens, E, C] dispatch einsum (which
+would dominate the roofline) and no dense all-experts compute (which would
+inflate HLO FLOPs by E/top_k). Overflowing tokens are dropped (standard
+capacity semantics); combine is a scatter-add weighted by router probs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def init_moe_mlp(key: Array, d_model: int, d_ff: int, n_experts: int,
+                 dtype=jnp.float32) -> dict:
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    ei = jax.vmap(lambda k: L.dense_init(k, d_model, d_ff, dtype))
+    eo = jax.vmap(lambda k: L.dense_init(k, d_ff, d_model, dtype))
+    return {
+        "router": L.dense_init(kr, d_model, n_experts, jnp.float32),
+        "wi": ei(jax.random.split(ki, n_experts)),  # [E, d, f]
+        "wg": ei(jax.random.split(kg, n_experts)),  # [E, d, f]
+        "wo": eo(jax.random.split(ko, n_experts)),  # [E, f, d]
+    }
+
+
+def _moe_one_seq(p: dict, xf: Array, *, top_k: int, capacity: int,
+                 activation: str) -> tuple[Array, Array]:
+    """Dispatch+compute for ONE sequence. xf: [T, d] -> ([T, d], aux).
+
+    Per-sequence dispatch keeps the argsort/gather/scatter local to the
+    sequence — under GSPMD the batch axis stays sharded and no token ever
+    crosses a shard boundary (the global-sort variant forced all-gathers of
+    the whole activation tensor; see §Perf log)."""
+    T, d = xf.shape
+    E = p["wi"].shape[0]
+
+    logits = (xf.astype(jnp.float32) @ p["router"])  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # [T, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- load balancing aux loss -------------------------------------------
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)
+    ce = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ------------------------------------------------
+    A = T * top_k
+    flat_expert = expert_ids.reshape(A)
+    flat_token = jnp.repeat(jnp.arange(T), top_k)
+    flat_gate = gate_vals.reshape(A)
+
+    order = jnp.argsort(flat_expert)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    rank = jnp.arange(A) - jnp.searchsorted(sorted_expert, sorted_expert,
+                                            side="left")
+    keep = rank < capacity
+    slot = jnp.where(keep, sorted_expert * capacity + rank, E * capacity)
+
+    buf_tokens = jnp.zeros((E * capacity + 1,), dtype=jnp.int32).at[slot].set(
+        sorted_token.astype(jnp.int32), mode="drop")
+    buf_gate = jnp.zeros((E * capacity + 1,), dtype=flat_gate.dtype).at[
+        slot].set(jnp.where(keep, sorted_gate, 0.0), mode="drop")
+    xe = xf[buf_tokens[: E * capacity]].reshape(E, capacity, d)
+
+    # ---- grouped expert matmuls (FLOPs = E*C*d*f, C*E = top_k*T*cf) ---------
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["wi"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"])  # [E, C, d]
+
+    ye_flat = (ye.reshape(E * capacity, d)
+               * buf_gate[: E * capacity, None].astype(ye.dtype))
+    out = jnp.zeros((T, d), dtype=ye.dtype).at[
+        buf_tokens[: E * capacity]].add(ye_flat)
+    return out.astype(xf.dtype), aux
+
+
+def _moe_dense(p: dict, x: Array, *, top_k: int,
+               activation: str) -> tuple[Array, Array]:
+    """Dense-mixture fallback: every expert computed on every token, combined
+    with the (renormalized top-k) router weights. Costs E/top_k x the active
+    FLOPs but contains NO gather/scatter — it partitions cleanly under GSPMD
+    (the sparse dispatch path measures pathologically on the 256-way mesh;
+    see EXPERIMENTS.md §Perf Cell B). Numerically identical to the sparse
+    path with infinite capacity."""
+    B, S, d = x.shape
+    E = p["wi"].shape[0]
+    logits = x.astype(jnp.float32) @ p["router"]  # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gv, ei = jax.lax.top_k(probs, top_k)
+    gv = gv / jnp.sum(gv, axis=-1, keepdims=True)
+    gates = jnp.sum(jax.nn.one_hot(ei, E, dtype=jnp.float32)
+                    * gv[..., None], axis=2)  # [B, S, E]
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean((gates > 0).astype(jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    h = act(jnp.einsum("bsd,edf->bsef", x, p["wg"])) * jnp.einsum(
+        "bsd,edf->bsef", x, p["wi"])
+    ye = jnp.einsum("bsef,efd->bsed", h, p["wo"])
+    out = jnp.einsum("bsed,bse->bsd", ye, gates.astype(ye.dtype))
+    return out.astype(x.dtype), aux
+
+
+def moe_mlp(p: dict, x: Array, *, top_k: int, capacity_factor: float = 1.25,
+            activation: str = "silu", impl: str = "sparse"
+            ) -> tuple[Array, Array]:
+    """x: [B, S, d] -> (out [B, S, d], aux loss). impl="sparse": vmapped
+    per-sequence dispatch (capacity = cf * S * top_k / E per sequence);
+    impl="dense": GSPMD-friendly dense mixture (see _moe_dense)."""
+    if impl == "dense":
+        return _moe_dense(p, x, top_k=top_k, activation=activation)
+    B, S, d = x.shape
+    E = p["wi"].shape[0]
+    capacity = max(top_k, int(capacity_factor * S * top_k / E + 0.5))
+    out, aux = jax.vmap(
+        lambda xs: _moe_one_seq(p, xs, top_k=top_k, capacity=capacity,
+                                activation=activation))(x)
+    return out, jnp.mean(aux)

@@ -1,0 +1,254 @@
+"""The paper's multimodal sensing model (Section III-B).
+
+Per-modality encoders E_m -> features h_m in R^{d_m}; the fusion layer takes
+the ordered concatenation h = [h_1; ...; h_M] in R^D and its (LoRA) projection
+matrix carries the modality-aligned column-block structure of Eq. (1).  A task
+head classifies the fused representation.
+
+Two backbones, as in the paper (Section VI-A3):
+  * ``cnn``         — Backbone 1: 2-layer 1-D CNN encoders, full-parameter
+                      training; fusion weight itself is column-blocked.
+  * ``transformer`` — Backbone 2: frozen patch-transformer encoders (MOMENT
+                      stand-in; see DESIGN.md §9) + LoRA adapters (rho=8) on
+                      attention Q/V and the FFN, MDLoRA on the fusion layer.
+
+Missing modalities: inputs are zero-padded (paper Eq. 2) and the encoder
+output h_m is zeroed, so block A_m receives exactly zero gradient for absent
+modalities (the paper's Assumption 4 with eps_0 = 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModalitySpec:
+    name: str
+    channels: int
+    d_feat: int  # d_m
+
+
+@dataclasses.dataclass(frozen=True)
+class MMConfig:
+    name: str
+    modalities: tuple[ModalitySpec, ...]
+    window: int = 256  # 5.12 s @ 50 Hz (paper VI-A1)
+    n_classes: int = 12
+    backbone: str = "cnn"  # cnn | transformer
+    d_fused: int = 128
+    head_hidden: int = 64
+    # cnn encoder
+    cnn_ch: tuple[int, int] = (32, 64)
+    cnn_kernel: int = 5
+    # transformer encoder (frozen)
+    enc_layers: int = 2
+    enc_d: int = 64
+    enc_heads: int = 4
+    enc_ff: int = 128
+    patch: int = 16
+    # LoRA
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    dtype: str = "float32"
+
+    @property
+    def M(self) -> int:
+        return len(self.modalities)
+
+    @property
+    def D(self) -> int:
+        return sum(m.d_feat for m in self.modalities)
+
+    @property
+    def block_dims(self) -> tuple[int, ...]:
+        return tuple(m.d_feat for m in self.modalities)
+
+    @property
+    def total_channels(self) -> int:
+        return sum(m.channels for m in self.modalities)
+
+    def runtime_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# encoders
+# ---------------------------------------------------------------------------
+
+
+def _init_cnn_encoder(key: Array, spec: ModalitySpec, cfg: MMConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    c1, c2 = cfg.cnn_ch
+    return {
+        "conv1": L.init_conv1d(k1, spec.channels, c1, cfg.cnn_kernel),
+        "conv2": L.init_conv1d(k2, c1, c2, cfg.cnn_kernel),
+        "proj": L.dense_init(k3, c2, spec.d_feat),
+    }
+
+
+def _cnn_encoder(p: dict, x: Array) -> Array:
+    """x: [B, T, C] -> [B, d_feat]."""
+    h = jax.nn.relu(L.conv1d(p["conv1"], x, stride=2))
+    h = jax.nn.relu(L.conv1d(p["conv2"], h, stride=2))
+    h = jnp.mean(h, axis=1)  # global average pool
+    return h @ p["proj"]
+
+
+def _init_tx_encoder(key: Array, spec: ModalitySpec, cfg: MMConfig) -> dict:
+    kp, kl, ko = jax.random.split(key, 3)
+    d = cfg.enc_d
+
+    def one_layer(k):
+        ka, km = jax.random.split(k)
+        dims = L.AttnDims(d, cfg.enc_heads, cfg.enc_heads, d // cfg.enc_heads)
+        return {"attn": L.init_attention(ka, dims), "mlp": L.init_glu_mlp(km, d, cfg.enc_ff),
+                "ln1": L.init_rmsnorm(d), "ln2": L.init_rmsnorm(d)}
+
+    return {
+        "patch": L.dense_init(kp, cfg.patch * spec.channels, d),
+        "layers": jax.vmap(one_layer)(jax.random.split(kl, cfg.enc_layers)),
+        "proj": L.dense_init(ko, d, spec.d_feat),
+    }
+
+
+def _init_tx_lora(key: Array, spec: ModalitySpec, cfg: MMConfig) -> dict:
+    """LoRA on Q/V + FFN of each encoder layer (paper VI-A3)."""
+    d, r = cfg.enc_d, cfg.lora_rank
+
+    def one_layer(k):
+        out = {}
+        for name, (din, dout) in (("wq", (d, d)), ("wv", (d, d)),
+                                  ("wi", (d, cfg.enc_ff))):
+            k, ka = jax.random.split(k)
+            out[name] = {"a": (jax.random.normal(ka, (din, r)) / math.sqrt(din)),
+                         "b": jnp.zeros((r, dout))}
+        return out
+
+    return jax.vmap(one_layer)(jax.random.split(key, cfg.enc_layers))
+
+
+def _tx_encoder(p: dict, lp: dict | None, cfg: MMConfig, x: Array) -> Array:
+    """x: [B, T, C] -> [B, d_feat]; bidirectional patch transformer."""
+    B, T, C = x.shape
+    P = cfg.patch
+    n_tok = T // P
+    tok = x[:, : n_tok * P].reshape(B, n_tok, P * C) @ p["patch"]
+    scale = cfg.lora_alpha / cfg.lora_rank
+
+    def lora(lp_l, name, h):
+        if lp_l is None:
+            return 0.0
+        return ((h @ lp_l[name]["a"]) @ lp_l[name]["b"]) * scale
+
+    def body(h, step):
+        pl, lpl = step
+        hn = L.rmsnorm(pl["ln1"], h)
+        dims = L.AttnDims(cfg.enc_d, cfg.enc_heads, cfg.enc_heads,
+                          cfg.enc_d // cfg.enc_heads)
+        H, hd = dims.n_heads, dims.head_dim
+        q = (hn @ pl["attn"]["wq"] + lora(lpl, "wq", hn)).reshape(B, n_tok, H, hd)
+        k = (hn @ pl["attn"]["wk"]).reshape(B, n_tok, H, hd)
+        v = (hn @ pl["attn"]["wv"] + lora(lpl, "wv", hn)).reshape(B, n_tok, H, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+        o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+        h = h + o.reshape(B, n_tok, H * hd) @ pl["attn"]["wo"]
+        hn = L.rmsnorm(pl["ln2"], h)
+        up = hn @ pl["mlp"]["wi"] + lora(lpl, "wi", hn)
+        h = h + (jax.nn.silu(hn @ pl["mlp"]["wg"]) * up) @ pl["mlp"]["wo"]
+        return h, None
+
+    h, _ = jax.lax.scan(body, tok,
+                        (p["layers"], None if lp is None else lp["layers"]))
+    return jnp.mean(h, axis=1) @ p["proj"]
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_mm_model(key: Array, cfg: MMConfig) -> dict:
+    keys = jax.random.split(key, cfg.M + 4)
+    init_enc = _init_cnn_encoder if cfg.backbone == "cnn" else _init_tx_encoder
+    encoders = {m.name: init_enc(keys[i], m, cfg)
+                for i, m in enumerate(cfg.modalities)}
+    kf, kh1, kh2 = keys[cfg.M: cfg.M + 3]
+    base = {
+        "encoders": encoders,
+        "fusion_w0": L.dense_init(kf, cfg.D, cfg.d_fused),
+        "head": {"w1": L.dense_init(kh1, cfg.d_fused, cfg.head_hidden),
+                 "w2": L.dense_init(kh2, cfg.head_hidden, cfg.n_classes)},
+    }
+    params: dict[str, Any] = {"base": base}
+    klo = keys[-1]
+    kfa, kfb, *kencs = jax.random.split(klo, 2 + cfg.M)
+    r = cfg.lora_rank
+    lora: dict[str, Any] = {
+        # fusion LoRA: a is [D, r] = A^T; modality blocks are row ranges of a
+        "fusion": {"a": (jax.random.normal(kfa, (cfg.D, r)) / math.sqrt(cfg.D)),
+                   "b": jnp.zeros((r, cfg.d_fused))},
+    }
+    if cfg.backbone == "transformer":
+        lora["encoders"] = {m.name: {"layers": _init_tx_lora(kencs[i], m, cfg)}
+                            for i, m in enumerate(cfg.modalities)}
+    params["lora"] = lora
+    return params
+
+
+def split_modalities(cfg: MMConfig, x: Array) -> dict[str, Array]:
+    """x: [B, T, total_channels] (ordered concat) -> per-modality slices."""
+    out, off = {}, 0
+    for m in cfg.modalities:
+        out[m.name] = x[..., off: off + m.channels]
+        off += m.channels
+    return out
+
+
+def mm_features(params: dict, cfg: MMConfig, x: Array,
+                modality_mask: Array) -> Array:
+    """-> fused-input features h = [h_1; ...; h_M] with absent blocks zeroed.
+
+    modality_mask: [M] or [B, M] float/bool; h_m := E_m(x_m) * mask_m, so the
+    fusion block A_m of an absent modality receives exactly zero gradient.
+    """
+    xs = split_modalities(cfg, x)
+    lora_enc = params.get("lora", {}).get("encoders")
+    hs = []
+    for i, m in enumerate(cfg.modalities):
+        if cfg.backbone == "cnn":
+            h = _cnn_encoder(params["base"]["encoders"][m.name], xs[m.name])
+        else:
+            lp = None if lora_enc is None else lora_enc[m.name]
+            h = _tx_encoder(params["base"]["encoders"][m.name], lp, cfg,
+                            xs[m.name])
+        mask = modality_mask[..., i: i + 1].astype(h.dtype)
+        hs.append(h * mask)
+    return jnp.concatenate(hs, axis=-1)  # [B, D]
+
+
+def mm_forward(params: dict, cfg: MMConfig, x: Array,
+               modality_mask: Array) -> Array:
+    """-> logits [B, n_classes]."""
+    h = mm_features(params, cfg, x, modality_mask)
+    scale = cfg.lora_alpha / cfg.lora_rank
+    fused = h @ params["base"]["fusion_w0"]
+    lora = params.get("lora")
+    if lora is not None and "fusion" in lora:
+        fused = fused + ((h @ lora["fusion"]["a"]) @ lora["fusion"]["b"]) * scale
+    z = jax.nn.relu(fused)
+    z = jax.nn.relu(z @ params["base"]["head"]["w1"])
+    return z @ params["base"]["head"]["w2"]
+
+
+def mm_loss(params: dict, cfg: MMConfig, batch: dict) -> Array:
+    logits = mm_forward(params, cfg, batch["x"], batch["modality_mask"])
+    return L.cross_entropy_logits(logits, batch["y"])

@@ -1,0 +1,486 @@
+"""Decoder-only transformer LM (dense / MoE / VLM / audio variants).
+
+One config-driven implementation covers phi3-medium, gemma2 (alternating
+local/global + softcaps + post-norms), granite (GQA/MQA), llava-next (vision
+patch embeddings prepended — frontend stub), musicgen (parallel codebook
+streams) and mixtral (MoE MLP, sliding window).
+
+Layers are consumed with ``jax.lax.scan`` over stacked parameters so the HLO
+(and compile time on the 512-device dry-run) stays O(1) in depth.  The layer
+pattern (uniform vs gemma-2 alternating local/global) is expressed as
+``n_sub`` sublayers per scan step with per-sublayer window sizes, so a single
+scan handles every pattern.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+
+Array = jax.Array
+GLOBAL_WINDOW = np.iinfo(np.int32).max
+
+
+def pattern(cfg: ModelConfig) -> tuple[int, tuple[int, ...]]:
+    """-> (n_sub, per-sublayer window sizes in tokens)."""
+    if cfg.layer_pattern == "alternating":
+        return 2, (cfg.sliding_window, GLOBAL_WINDOW)
+    if cfg.layer_pattern == "local":
+        return 1, (cfg.sliding_window,)
+    return 1, (GLOBAL_WINDOW,)
+
+
+def attn_dims(cfg: ModelConfig) -> L.AttnDims:
+    return L.AttnDims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key: Array, cfg: ModelConfig) -> dict:
+    ka, km = jax.random.split(key)
+    dt = cfg.p_dtype()
+    p: dict[str, Any] = {
+        "attn": L.init_attention(ka, attn_dims(cfg), dt),
+        "ln1": L.init_rmsnorm(cfg.d_model, dt),
+        "ln2": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if cfg.family == "moe":
+        p["mlp"] = MOE.init_moe_mlp(km, cfg.d_model, cfg.d_ff, cfg.n_experts, dt)
+    else:
+        p["mlp"] = L.init_glu_mlp(km, cfg.d_model, cfg.d_ff, dt)
+    if cfg.post_norms:  # gemma-2 style post-attention/post-ffw norms
+        p["ln1b"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["ln2b"] = L.init_rmsnorm(cfg.d_model, dt)
+    return p
+
+
+def init_lora(key: Array, cfg: ModelConfig) -> dict:
+    """LoRA adapters for the attention projections of every layer.
+
+    Storage convention: y += (x @ a) @ b * (alpha/rank); a: [in, r], b: [r, out].
+    ``wo``'s *a* matrix ([n_heads*head_dim, r]) is the fusion-projection whose
+    input concatenates per-head (per-modality for hybrid archs) features — the
+    RELIEF block axis (see core/mdlora.py).
+    """
+    dt = jnp.float32 if cfg.lora_dtype == "float32" else cfg.p_dtype()
+    r = cfg.lora_rank
+    d, hhd = cfg.d_model, cfg.n_heads * cfg.head_dim
+    khd = cfg.n_kv_heads * cfg.head_dim
+    shapes = {"wq": (d, hhd), "wk": (d, khd), "wv": (d, khd), "wo": (hhd, d)}
+
+    def one_layer(k):
+        out = {}
+        for name, (din, dout) in shapes.items():
+            if name not in cfg.lora_targets and not (
+                    name == "wo" and "wo_fusion" in cfg.lora_targets):
+                continue
+            k, ka = jax.random.split(k)
+            out[name] = {
+                "a": (jax.random.normal(ka, (din, r)) / math.sqrt(din)).astype(dt),
+                "b": jnp.zeros((r, dout), dtype=dt),
+            }
+        return out
+
+    return jax.vmap(one_layer)(jax.random.split(key, cfg.n_layers))
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Embedding tables are padded to a multiple of 128 (MXU lane width /
+    TP-shardable) — standard production practice; logits are sliced back to
+    the true vocab so the architecture semantics are exact."""
+    v = cfg.vocab * max(cfg.n_codebooks, 1)
+    return -(-v // 128) * 128
+
+
+def init_lm(key: Array, cfg: ModelConfig, with_lora: bool = True) -> dict:
+    ke, kl, kh, klo = jax.random.split(key, 4)
+    dt = cfg.p_dtype()
+    base: dict[str, Any] = {
+        "embed": L.embed_init(ke, padded_vocab(cfg), cfg.d_model, dt),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg))(
+            jax.random.split(kl, cfg.n_layers)),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        base["lm_head"] = L.dense_init(kh, cfg.d_model, padded_vocab(cfg), dt)
+    params = {"base": base}
+    if with_lora:
+        params["lora"] = {"layers": init_lora(klo, cfg)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# LoRA application
+# ---------------------------------------------------------------------------
+
+
+def lora_delta(lora_p: dict | None, name: str, x: Array, cfg: ModelConfig) -> Array | float:
+    if lora_p is None or name not in lora_p:
+        return 0.0
+    a, b = lora_p[name]["a"], lora_p[name]["b"]
+    scale = cfg.lora_alpha / cfg.lora_rank
+    return (((x.astype(a.dtype) @ a) @ b) * scale).astype(x.dtype)
+
+
+def _proj(base_w: Array, lora_p: dict | None, name: str, x: Array,
+          cfg: ModelConfig) -> Array:
+    return x @ base_w + lora_delta(lora_p, name, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# transformer block (attention + MLP, with LoRA hooks)
+# ---------------------------------------------------------------------------
+
+
+def _attention_lora(p: dict, lp: dict | None, cfg: ModelConfig, x: Array,
+                    positions: Array, kv_cache: dict | None, window) -> tuple:
+    from repro.dist.sharding import act_hint
+
+    dims = attn_dims(cfg)
+    B, S, _ = x.shape
+    H, K, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    q = act_hint(_proj(p["wq"], lp, "wq", x, cfg), "batch", None, "model")
+    k = act_hint(_proj(p["wk"], lp, "wk", x, cfg), "batch", None, "model")
+    v = act_hint(_proj(p["wv"], lp, "wv", x, cfg), "batch", None, "model")
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if cfg.query_scale is not None:
+        q = q * (cfg.query_scale * math.sqrt(hd))
+
+    new_cache = None
+    if kv_cache is None:
+        kk, vv, kv_pos = k, v, positions
+        k_scale = v_scale = None
+    else:
+        T = kv_cache["k"].shape[1]
+        slots = positions % T
+        if "k_scale" in kv_cache:  # int8 KV cache, per-(token, head) scales
+            ks = jnp.max(jnp.abs(k.astype(jnp.float32)), -1) / 127.0 + 1e-8
+            vs = jnp.max(jnp.abs(v.astype(jnp.float32)), -1) / 127.0 + 1e-8
+            k8 = jnp.round(k.astype(jnp.float32) / ks[..., None]
+                           ).astype(jnp.int8)
+            v8 = jnp.round(v.astype(jnp.float32) / vs[..., None]
+                           ).astype(jnp.int8)
+            kk = kv_cache["k"].at[:, slots].set(k8)
+            vv = kv_cache["v"].at[:, slots].set(v8)
+            k_scale = kv_cache["k_scale"].at[:, slots].set(ks)
+            v_scale = kv_cache["v_scale"].at[:, slots].set(vs)
+            kv_pos = kv_cache["pos"].at[slots].set(positions)
+            new_cache = {"k": kk, "v": vv, "k_scale": k_scale,
+                         "v_scale": v_scale, "pos": kv_pos}
+        else:
+            k_scale = v_scale = None
+            kk = kv_cache["k"].at[:, slots].set(k.astype(kv_cache["k"].dtype))
+            vv = kv_cache["v"].at[:, slots].set(v.astype(kv_cache["v"].dtype))
+            kv_pos = kv_cache["pos"].at[slots].set(positions)
+            new_cache = {"k": kk, "v": vv, "pos": kv_pos}
+    if k_scale is not None:  # dequantize at use (transient, per layer)
+        dt_ = cfg.runtime_dtype()
+        kk = (kk.astype(jnp.float32) * k_scale[..., None]).astype(dt_)
+        vv = (vv.astype(jnp.float32) * v_scale[..., None]).astype(dt_)
+
+    if cfg.attn_impl == "pallas":
+        qg = q.reshape(B, S, K, H // K, hd)
+        from repro.kernels.flash_attention import ops as fa_ops
+        o = fa_ops.flash_attention(qg, kk, vv, positions, kv_pos, window,
+                                   cfg.attn_softcap)
+    else:
+        # XLA path: repeat KV to full heads and shard the HEAD axis over
+        # ``model`` (Megatron TP; non-divisible head counts get GSPMD's
+        # padded sharding — DESIGN.md §4). The cache stays grouped [.., K,
+        # hd]; the repeat is a transient per layer.
+        G = H // K
+        kr = jnp.repeat(kk, G, axis=2) if G > 1 else kk
+        vr = jnp.repeat(vv, G, axis=2) if G > 1 else vv
+        qh = act_hint(q, "batch", None, "model_pad", None)
+        kr = act_hint(kr, "batch", None, "model_pad", None)
+        vr = act_hint(vr, "batch", None, "model_pad", None)
+        o = L._chunked_attention(qh[:, :, :, None], kr, vr, positions,
+                                 kv_pos, window, cfg.attn_softcap,
+                                 cfg.q_chunk)
+    o = act_hint(o.reshape(B, S, H * hd), "batch", None, "model")
+    return _proj(p["wo"], lp, "wo", o, cfg), new_cache
+
+
+def _sublayer(p: dict, lp: dict | None, cfg: ModelConfig, x: Array,
+              positions: Array, cache: dict | None, window) -> tuple:
+    from repro.dist.sharding import act_hint
+
+    seq_ax = "model" if cfg.seq_shard else None
+    x = act_hint(x, "batch", seq_ax, None)  # residual (SP: seq-sharded)
+    h = L.rmsnorm(p["ln1"], x)
+    attn_out, new_cache = _attention_lora(p["attn"], lp, cfg, h, positions,
+                                          cache, window)
+    if cfg.post_norms:
+        attn_out = L.rmsnorm(p["ln1b"], attn_out)
+    attn_out = act_hint(attn_out, "batch", seq_ax, None)  # SP: reduce-scatter
+    x = x + attn_out
+    h = L.rmsnorm(p["ln2"], x)
+    if cfg.family == "moe":
+        mlp_out, aux = MOE.moe_mlp(p["mlp"], h, top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor,
+                                   activation=cfg.activation,
+                                   impl=cfg.moe_impl)
+    else:
+        hint = lambda t: act_hint(t, "batch", None, "model")
+        mlp_out, aux = L.glu_mlp(p["mlp"], h, cfg.activation, hint), 0.0
+    if cfg.post_norms:
+        mlp_out = L.rmsnorm(p["ln2b"], mlp_out)
+    mlp_out = act_hint(mlp_out, "batch", seq_ax, None)  # SP: reduce-scatter
+    return x + mlp_out, new_cache, aux
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding (dense, vlm, audio variants)
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params: dict, cfg: ModelConfig, tokens: Array,
+                 patches: Array | None = None) -> Array:
+    emb = params["base"]["embed"]
+    if cfg.n_codebooks:  # musicgen: tokens [B, S, n_codebooks], summed streams
+        offs = jnp.arange(cfg.n_codebooks, dtype=tokens.dtype) * cfg.vocab
+        x = jnp.sum(jnp.take(emb, tokens + offs, axis=0), axis=2)
+    else:
+        x = jnp.take(emb, tokens, axis=0)
+    x = x.astype(cfg.runtime_dtype())
+    if patches is not None:  # llava: precomputed patch embeddings (stub frontend)
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    return x * jnp.array(math.sqrt(cfg.d_model) if cfg.family == "vlm_scaled"
+                         else 1.0, x.dtype)
+
+
+def unembed(params: dict, cfg: ModelConfig, h: Array) -> Array:
+    base = params["base"]
+    if cfg.tie_embeddings:
+        logits = h @ base["embed"].T.astype(h.dtype)
+    else:
+        logits = h @ base["lm_head"]
+    from repro.dist.sharding import act_hint
+    logits = act_hint(logits, "batch", None, "model")
+    v = cfg.vocab * max(cfg.n_codebooks, 1)
+    if logits.shape[-1] != v:  # drop vocab-padding columns
+        logits = logits[..., :v]
+    logits = L.softcap(logits, cfg.final_softcap)
+    if cfg.n_codebooks:
+        logits = logits.reshape(*logits.shape[:-1], cfg.n_codebooks, cfg.vocab)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _stacked_to_steps(tree, n_sub: int):
+    """[L, ...] -> [L/n_sub, n_sub, ...] for scan over sublayer groups."""
+    return jax.tree.map(lambda x: x.reshape(x.shape[0] // n_sub, n_sub,
+                                            *x.shape[1:]), tree)
+
+
+def lm_forward(params: dict, cfg: ModelConfig, tokens: Array,
+               patches: Array | None = None, positions: Array | None = None,
+               caches: list | None = None,
+               skip_unembed: bool = False) -> tuple[Array, list | None, Array]:
+    """-> (logits | final hidden, updated caches | None, moe aux loss)."""
+    x = embed_tokens(params, cfg, tokens, patches)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    n_sub, windows = pattern(cfg)
+    n_steps = cfg.n_layers // n_sub
+
+    layer_p = _stacked_to_steps(params["base"]["layers"], n_sub)
+    lora_layers = params.get("lora", {}).get("layers")
+    lora_p = _stacked_to_steps(lora_layers, n_sub) if lora_layers is not None else None
+
+    def body(carry, step):
+        x, aux = carry
+        p_step, lp_step, cache_step = step
+        new_caches = []
+        for s in range(n_sub):
+            p_s = jax.tree.map(lambda a: a[s], p_step)
+            lp_s = jax.tree.map(lambda a: a[s], lp_step) if lp_step is not None else None
+            c_s = None if cache_step is None else jax.tree.map(lambda a: a[s], cache_step)
+            x, nc, a = _sublayer(p_s, lp_s, cfg, x, positions, c_s, windows[s])
+            new_caches.append(nc)
+            aux = aux + a
+        stacked_nc = (None if cache_step is None else
+                      jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches))
+        return (x, aux), stacked_nc
+
+    body = _remat_wrap(body, cfg)
+    caches_steps = None if caches is None else _stacked_to_steps(caches, n_sub)
+
+    if cfg.scan_layers:
+        (x, aux), nc = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                    (layer_p, lora_p, caches_steps))
+    else:  # unrolled (dry-run: exact per-layer cost/collective accounting)
+        carry = (x, jnp.float32(0.0))
+        ncs = []
+        for t in range(n_steps):
+            step = (jax.tree.map(lambda a: a[t], layer_p),
+                    None if lora_p is None else
+                    jax.tree.map(lambda a: a[t], lora_p),
+                    None if caches_steps is None else
+                    jax.tree.map(lambda a: a[t], caches_steps))
+            carry, nc_t = body(carry, step)
+            ncs.append(nc_t)
+        (x, aux) = carry
+        nc = (None if caches_steps is None else
+              jax.tree.map(lambda *xs: jnp.stack(xs), *ncs))
+    new_caches = (None if caches is None else jax.tree.map(
+        lambda a: a.reshape(n_steps * n_sub, *a.shape[2:]), nc))
+
+    x = L.rmsnorm(params["base"]["final_norm"], x)
+    if skip_unembed:
+        return x, new_caches, aux
+    return unembed(params, cfg, x), new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# KV caches / decode
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg: ModelConfig, sub: int, max_len: int) -> int:
+    _, windows = pattern(cfg)
+    return int(min(windows[sub], max_len))
+
+
+def init_kv_caches(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=None) -> dict:
+    """Per-layer ring-buffer caches, stacked [L, B, T_l, K, hd].
+
+    With an alternating pattern the two sublayer groups have different ring
+    sizes, so caches are stored per *scan step* with a [n_steps]-leading tree
+    of per-sublayer entries; uniform patterns collapse to a single [L,...] set.
+    Ring size = min(window, max_len) — sliding-window layers never allocate
+    more than their window (this is what makes long_500k feasible).
+    """
+    dtype = dtype or cfg.runtime_dtype()
+    n_sub, windows = pattern(cfg)
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    n_steps = cfg.n_layers // n_sub
+    # store as [L, ...] where sublayer s of step t is layer t*n_sub+s; ring
+    # sizes differ per sublayer => pad rings to per-sublayer size via a list
+    # of stacked arrays, one per sublayer slot, interleaved back in forward.
+    caches = []
+    for s in range(n_sub):
+        T = int(min(windows[s], max_len))
+        if cfg.kv_quant:
+            caches.append({
+                "k": jnp.zeros((n_steps, batch, T, K, hd), jnp.int8),
+                "v": jnp.zeros((n_steps, batch, T, K, hd), jnp.int8),
+                "k_scale": jnp.zeros((n_steps, batch, T, K), jnp.float32),
+                "v_scale": jnp.zeros((n_steps, batch, T, K), jnp.float32),
+                "pos": jnp.full((n_steps, T), -1, dtype=jnp.int32),
+            })
+        else:
+            caches.append({
+                "k": jnp.zeros((n_steps, batch, T, K, hd), dtype=dtype),
+                "v": jnp.zeros((n_steps, batch, T, K, hd), dtype=dtype),
+                "pos": jnp.full((n_steps, T), -1, dtype=jnp.int32),
+            })
+    # interleave sublayer slots back into a [L, ...]-indexed tree when ring
+    # sizes agree; otherwise keep the per-sublayer list (forward handles both)
+    if n_sub == 1:
+        return caches[0]
+    if len({c["k"].shape[2] for c in caches}) == 1:
+        return jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=1).reshape(
+                n_steps * n_sub, *xs[0].shape[1:]), *caches)
+    return {"__per_sub__": caches}
+
+
+def _caches_for_scan(cfg: ModelConfig, caches):
+    """Normalize cache container to per-step [n_steps, n_sub(list), ...]."""
+    n_sub, _ = pattern(cfg)
+    if isinstance(caches, dict) and "__per_sub__" in caches:
+        return caches["__per_sub__"]
+    return caches
+
+
+def lm_decode_step(params: dict, cfg: ModelConfig, caches, token: Array,
+                   pos: Array) -> tuple[Array, Any]:
+    """One-token decode. token: [B, 1]; pos: scalar int32."""
+    x = embed_tokens(params, cfg, token)
+    positions = pos[None].astype(jnp.int32)
+    n_sub, windows = pattern(cfg)
+    n_steps = cfg.n_layers // n_sub
+
+    layer_p = _stacked_to_steps(params["base"]["layers"], n_sub)
+    lora_layers = params.get("lora", {}).get("layers")
+    lora_p = _stacked_to_steps(lora_layers, n_sub) if lora_layers is not None else None
+
+    per_sub = isinstance(caches, dict) and "__per_sub__" in caches
+    cache_in = (caches["__per_sub__"] if per_sub
+                else _stacked_to_steps(caches, n_sub))
+
+    def body(x, step):
+        p_step, lp_step, cache_step = step
+        new_caches = []
+        for s in range(n_sub):
+            p_s = jax.tree.map(lambda a: a[s], p_step)
+            lp_s = jax.tree.map(lambda a: a[s], lp_step) if lp_step is not None else None
+            c_s = cache_step[s] if per_sub else jax.tree.map(lambda a: a[s], cache_step)
+            x, nc, _ = _sublayer(p_s, lp_s, cfg, x, positions, c_s, windows[s])
+            new_caches.append(nc)
+        out = (tuple(new_caches) if per_sub
+               else jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches))
+        return x, out
+
+    if not cfg.scan_layers:  # unrolled decode (dry-run accounting)
+        ncs_list = []
+        for t in range(n_steps):
+            step = (jax.tree.map(lambda a: a[t], layer_p),
+                    None if lora_p is None else
+                    jax.tree.map(lambda a: a[t], lora_p),
+                    tuple(jax.tree.map(lambda a: a[t], c) for c in cache_in)
+                    if per_sub else
+                    jax.tree.map(lambda a: a[t], cache_in))
+            x, nc_t = body(x, step)
+            ncs_list.append(nc_t)
+        if per_sub:
+            new_caches = {"__per_sub__": [
+                jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[nc[s] for nc in ncs_list])
+                for s in range(n_sub)]}
+        else:
+            nc = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs_list)
+            new_caches = jax.tree.map(
+                lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), nc)
+    elif per_sub:
+        x, ncs = jax.lax.scan(body, x, (layer_p, lora_p, tuple(cache_in)))
+        new_caches = {"__per_sub__": list(ncs)}
+    else:
+        x, nc = jax.lax.scan(body, x, (layer_p, lora_p, cache_in))
+        new_caches = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), nc)
+
+    x = L.rmsnorm(params["base"]["final_norm"], x)
+    return unembed(params, cfg, x), new_caches

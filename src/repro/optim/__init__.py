@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adam_init, adam_update, sgd_init,
+                                    sgd_update, make_optimizer,
+                                    cosine_schedule, linear_warmup_cosine)

@@ -1,0 +1,104 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+Adam/AdamW keep fp32 moments regardless of param dtype; ``make_optimizer``
+returns an (init, update) pair over arbitrary pytrees. ZeRO-1 sharding of the
+moment buffers is applied at the sharding-spec level (dist/sharding.py) — the
+math here is sharding-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _f32(tree):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), tree)
+
+
+def adam_init(params: Any) -> dict:
+    return {"m": _f32(params), "v": _f32(params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params: Any, grads: Any, state: dict, lr: float | Array,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0) -> tuple[Any, dict]:
+    t = state["t"] + 1
+    tf = t.astype(jnp.float32)
+    bc1 = 1.0 - b1**tf
+    bc2 = 1.0 - b2**tf
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        step = lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda x: x[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "t": t}
+
+
+def sgd_init(params: Any) -> dict:
+    return {"mom": _f32(params)}
+
+
+def sgd_update(params: Any, grads: Any, state: dict, lr: float | Array,
+               momentum: float = 0.9) -> tuple[Any, dict]:
+    def upd(p, g, m):
+        m_new = momentum * m + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * m_new).astype(p.dtype), m_new
+
+    out = jax.tree.map(upd, params, grads, state["mom"])
+    new_params = jax.tree.map(lambda x: x[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mom": new_m}
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], dict]
+    update: Callable[..., tuple[Any, dict]]
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adam":
+        return Optimizer(adam_init,
+                         lambda p, g, s, lr: adam_update(p, g, s, lr, **kw))
+    if name == "sgd":
+        return Optimizer(sgd_init,
+                         lambda p, g, s, lr: sgd_update(p, g, s, lr, **kw))
+    raise ValueError(name)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def fn(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                          (1 + jnp.cos(jnp.pi * frac)))
+    return fn
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         min_frac: float = 0.05):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), min_frac)
+
+    def fn(step):
+        w = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, base_lr * w, cos(step - warmup))
+    return fn

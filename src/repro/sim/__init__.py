@@ -1,0 +1,3 @@
+from repro.sim.devices import (DEVICE_PROFILES, DeviceProfile, FleetConfig,
+                               make_fleet, scale_fleet)
+from repro.sim.timing import RoundCost, simulate_round

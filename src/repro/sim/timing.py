@@ -1,0 +1,79 @@
+"""FLOP-proportional round timing + datasheet energy model (paper VI-A3).
+
+Round anatomy per device n (synchronous FL):
+    t_compute(n) = train_flops(n) / (tops_n * util)
+    t_comm(n)    = upload_bytes(n) / bandwidth_n
+    t_idle(n)    = round_time - t_compute(n) - t_comm(n)
+    round_time   = max_n (t_compute + t_comm) + t_overhead
+
+train_flops(n) charges only the parameter groups the device actually trains
+(elastic masking saves backward+optimizer FLOPs; the frozen-forward cost is
+charged always — this reproduces the paper's Sec. VII finding that LoRA
+speedups are bounded by the fixed forward cost).
+
+Energy per device = P_active*t_compute + P_comm*t_comm + P_idle*t_idle,
+fleet energy = sum over devices (Eq. analog of Fig. 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sim.devices import FleetConfig
+
+
+@dataclasses.dataclass
+class RoundCost:
+    round_time_s: float
+    per_device_compute_s: np.ndarray
+    per_device_comm_s: np.ndarray
+    per_device_idle_s: np.ndarray
+    fleet_energy_j: float
+    upload_mb: float
+
+    def as_dict(self) -> dict:
+        return {"round_time_s": self.round_time_s,
+                "fleet_energy_j": self.fleet_energy_j,
+                "upload_mb": self.upload_mb}
+
+
+def simulate_round(fleet: FleetConfig, selected: np.ndarray,
+                   trained_flops: np.ndarray, fixed_flops: np.ndarray,
+                   upload_bytes: np.ndarray, t_overhead: float = 0.05,
+                   utilization: float = 0.3) -> RoundCost:
+    """selected: [N] bool participation; trained_flops/fixed_flops: [N]
+    per-round FLOPs for (masked backward+update) and (always-paid forward);
+    upload_bytes: [N] Eq. 8 on-demand volume."""
+    sel = np.asarray(selected, bool)
+    eff = fleet.tops * 1e12 * utilization
+    t_comp = np.where(sel, (trained_flops + fixed_flops) / eff, 0.0)
+    t_comm = np.where(sel, upload_bytes * 8.0 / (fleet.bandwidth_mbps * 1e6), 0.0)
+    busy = t_comp + t_comm
+    round_time = float(busy.max()) + t_overhead if sel.any() else t_overhead
+    t_idle = np.where(sel, round_time - busy, 0.0)
+    energy = float(np.sum(np.where(
+        sel,
+        fleet.active_power * t_comp + fleet.comm_power * t_comm
+        + fleet.idle_power * t_idle, 0.0)))
+    return RoundCost(round_time, t_comp, t_comm, t_idle, energy,
+                     float(upload_bytes[sel].sum()) / 1e6)
+
+
+def group_train_flops(group_flops: np.ndarray, S: np.ndarray,
+                      steps_per_round: int, flops_per_param: float = 4.0
+                      ) -> np.ndarray:
+    """[G] per-group cost x [N, G] selection -> [N] masked training FLOPs.
+
+    flops_per_param ~ backward(2x) + optimizer(2x) per trained parameter per
+    example-step; the forward cost goes into ``fixed_flops``.
+    """
+    return (S.astype(np.float64) @ group_flops) * steps_per_round * flops_per_param
+
+
+def profile_tau(fleet: FleetConfig, group_flops: np.ndarray,
+                steps_per_round: int, utilization: float = 0.3) -> np.ndarray:
+    """Eq. 7's profiled per-group training time tau_n (uniform mean over
+    groups, as in the paper)."""
+    mean_group = float(np.mean(group_flops)) * steps_per_round * 4.0
+    return mean_group / (fleet.tops * 1e12 * utilization)

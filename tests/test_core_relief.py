@@ -1,0 +1,344 @@
+"""Unit + property tests for the RELIEF core (mdlora, aggregation,
+divergence, allocation) — the paper's Eqs. 1-8 and Props. 4-5."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as AG
+from repro.core import allocation as AL
+from repro.core import divergence as DV
+from repro.core import mdlora
+from repro.core.tasks import MMTask
+from repro.data import mm_config_for
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def cnn_task():
+    cfg = mm_config_for("pamap2", backbone="cnn", d_feat=8, d_fused=32,
+                        cnn_ch=(8, 16))
+    return MMTask.create(cfg, KEY)
+
+
+@pytest.fixture(scope="module")
+def tx_task():
+    cfg = mm_config_for("pamap2", backbone="transformer", d_feat=8,
+                        d_fused=32, enc_layers=2, enc_d=16, enc_ff=32)
+    return MMTask.create(cfg, KEY)
+
+
+def _stack(tree, n, key):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: jax.tree.map(
+        lambda x: jax.random.normal(k, x.shape, jnp.float32), tree))(keys)
+
+
+# ---------------------------------------------------------------------------
+# layout (Eq. 1 + Sec. III-B grouping)
+# ---------------------------------------------------------------------------
+
+
+def test_group_count_matches_paper_formula(cnn_task, tx_task):
+    # G = M fusion blocks + 1 (B) + sum L_m encoder groups + L_H head groups
+    for task, _ in (cnn_task, tx_task):
+        lay = task.layout
+        M = lay.n_modalities
+        n_fusion = len(lay.group_ids(mdlora.KIND_FUSION_BLOCK))
+        n_b = len(lay.group_ids(mdlora.KIND_FUSION_B))
+        assert n_fusion == M == 4
+        assert n_b == 1
+        assert lay.G == n_fusion + n_b + len(lay.group_ids(
+            mdlora.KIND_ENCODER)) + len(lay.group_ids(mdlora.KIND_HEAD))
+
+
+def test_fusion_rows_partition_D(cnn_task):
+    task, _ = cnn_task
+    lay = task.layout
+    D = task.cfg.D
+    rg = lay.row_group_vector(D)
+    # contiguous ordered blocks covering all rows exactly once
+    assert len(rg) == D
+    boundaries = [s for s, e, g in lay.fusion_rows] + [D]
+    assert boundaries == sorted(boundaries)
+    covered = np.zeros(D, bool)
+    for s, e, g in lay.fusion_rows:
+        assert not covered[s:e].any()
+        covered[s:e] = True
+    assert covered.all()
+
+
+def test_accessible_and_mandatory(cnn_task):
+    task, _ = cnn_task
+    lay = task.layout
+    mm = np.array([[1, 1, 0, 0], [1, 0, 0, 0], [1, 1, 1, 1]], bool)
+    acc = lay.accessible(mm)
+    man = lay.mandatory(mm)
+    # mandatory set = owned fusion blocks only (paper IV-B2b)
+    assert man.sum(1).tolist() == [2, 1, 4]
+    assert (man <= acc).all()
+    # B (size 0 in B1) and head accessibility
+    head_ids = lay.group_ids(mdlora.KIND_HEAD)
+    assert acc[:, head_ids].all()
+
+
+def test_group_gate_roundtrip(cnn_task):
+    task, tr = cnn_task
+    lay = task.layout
+    ones = mdlora.group_gate_tree(lay, tr, jnp.ones(lay.G))
+    for a, b in zip(jax.tree.leaves(ones), jax.tree.leaves(tr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    zeros = mdlora.group_gate_tree(lay, tr, jnp.zeros(lay.G))
+    assert all(float(jnp.max(jnp.abs(x))) == 0 for x in jax.tree.leaves(zeros))
+
+
+def test_group_norms_partition_total(cnn_task):
+    task, tr = cnn_task
+    lay = task.layout
+    gn = mdlora.group_norms(lay, tr)
+    total = sum(float(jnp.sum(jnp.square(x.astype(jnp.float32))))
+                for x in jax.tree.leaves(tr))
+    np.testing.assert_allclose(float(jnp.sum(gn)), total, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# aggregation (Eq. 3-4, Lemma 1, Theorem 2)
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_equals_fedavg_when_homogeneous(cnn_task):
+    """Theorem-2 sanity: with all clients owning all modalities and all
+    groups trained, cohort-wise aggregation == FedAvg."""
+    task, tr = cnn_task
+    lay = task.layout
+    N = 5
+    deltas = _stack(tr, N, KEY)
+    mm = jnp.ones((N, 4))
+    trained = jnp.ones((N, lay.G)) * jnp.asarray(lay.sizes > 0)
+    Wc = AG.cohort_weights(lay, trained, mm)
+    Wf = AG.fedavg_weights(N, lay.G)
+    agg_c = mdlora.weighted_combine(lay, deltas, Wc)
+    agg_f = mdlora.weighted_combine(lay, deltas, Wf)
+    for a, b in zip(jax.tree.leaves(agg_c), jax.tree.leaves(agg_f)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_absent_modality_never_pollutes_block(cnn_task):
+    """Eq. 3: clients outside C~_m contribute nothing to block A_m."""
+    task, tr = cnn_task
+    lay = task.layout
+    N = 4
+    deltas = _stack(tr, N, KEY)
+    mm = np.ones((N, 4)); mm[0, 2] = 0  # client 0 lacks modality 2 (mag)
+    trained = lay.accessible(mm) & (lay.sizes > 0)
+    W = AG.cohort_weights(lay, jnp.asarray(trained, jnp.float32),
+                          jnp.asarray(mm, jnp.float32))
+    agg = mdlora.weighted_combine(lay, deltas, W)
+    # poison client 0's copy of the mag rows; aggregate must not change
+    s, e, g = lay.fusion_rows[2]
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(deltas)
+    poisoned = []
+    for path, leaf in leaves:
+        if mdlora.path_str(path) == lay.fusion_a_path:
+            leaf = leaf.at[0, s:e].add(1e6)
+        poisoned.append(leaf)
+    agg2 = mdlora.weighted_combine(
+        lay, jax.tree_util.tree_unflatten(treedef, poisoned), W)
+    for a, b in zip(jax.tree.leaves(agg), jax.tree.leaves(agg2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_empty_cohort_freezes_block(cnn_task):
+    task, tr = cnn_task
+    lay = task.layout
+    N = 3
+    deltas = _stack(tr, N, KEY)
+    mm = np.ones((N, 4)); mm[:, 3] = 0  # nobody owns hr
+    trained = lay.accessible(mm) & (lay.sizes > 0)
+    W = AG.cohort_weights(lay, jnp.asarray(trained, jnp.float32),
+                          jnp.asarray(mm, jnp.float32))
+    agg = mdlora.weighted_combine(lay, deltas, W)
+    s, e, _ = lay.fusion_rows[3]
+    leaves = jax.tree_util.tree_flatten_with_path(agg)[0]
+    fusion = next(l for pth, l in leaves
+                  if mdlora.path_str(pth) == lay.fusion_a_path)
+    assert float(jnp.max(jnp.abs(fusion[s:e]))) == 0.0
+
+
+def test_b_weighting_prefers_multimodal_clients(tx_task):
+    """Eq. 4: w_n proportional to |M_n|/M among uploaders."""
+    task, tr = tx_task
+    lay = task.layout
+    mm = jnp.asarray([[1, 1, 1, 1], [1, 0, 0, 0]], jnp.float32)
+    trained = jnp.ones((2, lay.G))
+    W = AG.cohort_weights(lay, trained, mm)
+    b_gid = int(lay.group_ids(mdlora.KIND_FUSION_B)[0])
+    np.testing.assert_allclose(np.asarray(W[:, b_gid]), [0.8, 0.2], rtol=1e-6)
+    # head groups remain uniform
+    h_gid = int(lay.group_ids(mdlora.KIND_HEAD)[0])
+    np.testing.assert_allclose(np.asarray(W[:, h_gid]), [0.5, 0.5], rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(2, 10), st.integers(1, 9), st.integers(0, 10**6))
+def test_lemma1_decomposition_bounds(n, nc, seed):
+    nc = min(nc, n)
+    rng = np.random.default_rng(seed)
+    deltas = jnp.asarray(rng.normal(size=(n, 6, 3)), jnp.float32)
+    cohort = np.zeros(n, bool); cohort[:nc] = True
+    # absent clients produce zero updates (Assumption 4, eps0 = 0)
+    deltas = deltas * jnp.asarray(cohort, jnp.float32)[:, None, None]
+    out = AG.lemma1_decomposition(deltas, cohort)
+    assert float(out["error"]) <= float(out["bound"]) + 1e-5
+    # with eps0=0, interference term vanishes and error = scaling bias exactly
+    np.testing.assert_allclose(float(out["interference"]), 0.0, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# divergence (Eq. 5-6)
+# ---------------------------------------------------------------------------
+
+
+def test_group_divergence_matches_naive(cnn_task):
+    task, tr = cnn_task
+    lay = task.layout
+    N = 5
+    deltas = _stack(tr, N, KEY)
+    cohort = jnp.asarray(np.random.default_rng(0).random((N, lay.G)) < 0.7,
+                         jnp.float32)
+    d = DV.group_divergence(lay, deltas, cohort)
+    # naive per-group computation
+    per_client = jax.vmap(lambda t: mdlora.group_norms(lay, t))
+    for g in range(lay.G):
+        c = np.asarray(cohort[:, g])
+        if c.sum() == 0 or lay.sizes[g] == 0:
+            assert float(d[g]) == 0.0
+            continue
+        Wg = jnp.zeros((N, lay.G)).at[:, g].set(cohort[:, g] / c.sum())
+        mean_g = mdlora.weighted_combine(lay, deltas, Wg)
+        dev = jax.tree.map(lambda x, m: x - m[None], deltas, mean_g)
+        norms = per_client(dev)[:, g]
+        want = float(jnp.sum(norms * cohort[:, g]) / c.sum())
+        np.testing.assert_allclose(float(d[g]), want, rtol=1e-4)
+
+
+def test_divergence_zero_for_identical_updates(cnn_task):
+    task, tr = cnn_task
+    lay = task.layout
+    one = jax.tree.map(lambda x: jax.random.normal(KEY, x.shape), tr)
+    deltas = jax.tree.map(lambda x: jnp.stack([x] * 4), one)
+    d = DV.group_divergence(lay, deltas, jnp.ones((4, lay.G)))
+    np.testing.assert_allclose(np.asarray(d), 0.0, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.floats(0.05, 0.95), st.floats(0.0, 1.0), st.integers(0, 1000))
+def test_ema_bias_bound(gamma, delta_scale, seed):
+    """Prop. 5 steady-state EMA bias <= delta*(1-gamma)/gamma (the CORRECTED
+    Eq. 21 constant — see divergence.ema_bias_bound docstring)."""
+    rng = np.random.default_rng(seed)
+    R = 300
+    d = np.cumsum(rng.uniform(-delta_scale, delta_scale, R)) + 5.0
+    d = np.abs(d)
+    delta_max = float(np.max(np.abs(np.diff(d)))) if R > 1 else 0.0
+    dbar = d[0]
+    biases = []
+    for r in range(1, R):
+        dbar = DV.ema_update(dbar, d[r], gamma)
+        biases.append(abs(dbar - d[r]))
+    bound = DV.ema_bias_bound(gamma, delta_max)
+    assert max(biases[50:]) <= bound + 1e-9
+
+
+def test_ema_paper_bound_is_violated_for_small_gamma():
+    """Documents the Eq. 21 discrepancy: the paper's printed constant
+    gamma*delta/(1-gamma)^2 is NOT an upper bound when gamma < 1/2 (the
+    EMA lags a drifting signal by ~(1-gamma)/gamma steps)."""
+    gamma, delta = 0.25, 1.0
+    d = np.arange(300, dtype=float) * delta  # steady drift, |diff| = delta
+    dbar = d[0]
+    biases = []
+    for r in range(1, 300):
+        dbar = DV.ema_update(dbar, d[r], gamma)
+        biases.append(abs(dbar - d[r]))
+    paper = DV.ema_bias_bound_paper(gamma, delta)
+    corrected = DV.ema_bias_bound(gamma, delta)
+    assert max(biases[50:]) > paper  # the printed bound fails
+    assert max(biases[50:]) <= corrected + 1e-9  # the corrected bound holds
+
+
+# ---------------------------------------------------------------------------
+# allocation (Eq. 7, Prop. 4)
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_budgets_eq7():
+    tau = np.array([1.0, 5.0, 50.0])
+    k = AL.elastic_budgets(tau, t_star=10.0, t_overhead=0.0,
+                           n_mandatory=np.array([4, 2, 1]),
+                           g_max=np.array([19, 19, 19]))
+    assert k.tolist() == [10, 2, 1]  # floor((10)/tau) with mandatory floor
+
+
+def test_topk_respects_budget_and_mandatory():
+    rng = np.random.default_rng(0)
+    N, G = 6, 12
+    dbar = rng.random(G)
+    acc = rng.random((N, G)) < 0.8
+    man = acc & (rng.random((N, G)) < 0.3)
+    k = np.maximum(man.sum(1), rng.integers(1, G, N))
+    S = AL.allocate_topk(dbar, acc, man, k)
+    assert (S <= acc).all()
+    assert (S >= man).all()
+    assert (S.sum(1) <= k).all()
+    # greedy optimality: selected non-mandatory groups have scores >= any
+    # unselected accessible group
+    for n in range(N):
+        sel = S[n] & ~man[n]
+        unsel = acc[n] & ~S[n]
+        if sel.any() and unsel.any():
+            assert dbar[sel].min() >= dbar[unsel].max() - 1e-12
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(2, 6), st.integers(0, 10**6))
+def test_water_filling_is_kkt_optimal(m, seed):
+    """Prop. 4: closed form beats any random feasible allocation."""
+    rng = np.random.default_rng(seed)
+    delta = rng.uniform(0.1, 10.0, m)
+    K = rng.uniform(m, 10 * m)
+    x_star, r_star = AL.water_filling(delta, K)
+    np.testing.assert_allclose(x_star.sum(), K, rtol=1e-9)
+    np.testing.assert_allclose(
+        r_star, AL.weighted_cohort_residual(delta, x_star), rtol=1e-9)
+    np.testing.assert_allclose(r_star, (np.sqrt(delta).sum())**2 / K,
+                               rtol=1e-9)
+    for _ in range(10):
+        x = rng.dirichlet(np.ones(m)) * K
+        assert AL.weighted_cohort_residual(delta, x) >= r_star - 1e-9
+    # x* proportional to sqrt(delta)
+    ratio = x_star / np.sqrt(delta)
+    np.testing.assert_allclose(ratio, ratio[0], rtol=1e-9)
+
+
+def test_topk_approximates_water_filling_rank_order():
+    """Prop. 4 remark: greedy top-k is rank-preserving w.r.t. sqrt(delta)."""
+    dbar = np.array([9.0, 4.0, 1.0, 0.25])
+    acc = np.ones((1, 4), bool)
+    man = np.zeros((1, 4), bool)
+    for k in range(1, 5):
+        S = AL.allocate_topk(dbar, acc, man, np.array([k]))
+        assert S[0, :k].all() and not S[0, k:].any()
+
+
+def test_solve_t_star_utilization_floor():
+    tau = np.array([1.0, 13.0, 55.0])
+    g_max = np.array([19, 19, 19])
+    t = AL.solve_t_star(tau, 0.0, np.array([4, 2, 1]), g_max)
+    # fastest device completes its full set within T*
+    assert t >= 19.0 * 1.0 - 1e-6
+    k = AL.elastic_budgets(tau, t, 0.0, np.array([4, 2, 1]), g_max)
+    assert k[0] == 19  # fast device fully utilized
+    assert k[2] >= 1  # mandatory floor

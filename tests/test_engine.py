@@ -1,0 +1,169 @@
+"""Integration tests for the federated engine (Algorithm 1) and strategies."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import FedConfig, FedRun
+from repro.core.strategies import (ABLATIONS, ALL_BASELINES, get_strategy)
+from repro.core.tasks import MMTask
+from repro.data import make_har_dataset, mm_config_for
+from repro.sim import make_fleet
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_har_dataset("pamap2", windows_per_subject=60, seed=0)
+    fleet = make_fleet(3, 3, 2, M=4)
+    cfg = mm_config_for("pamap2", backbone="cnn", d_feat=8, d_fused=32,
+                        cnn_ch=(8, 16))
+    task, tr0 = MMTask.create(cfg, KEY)
+    fed = FedConfig(rounds=3, local_epochs=1, steps_per_epoch=2,
+                    batch_size=16, eval_every=3, utilization=1e-4)
+    return ds, fleet, task, tr0, fed
+
+
+ALL_STRATEGIES = sorted(set(list(ALL_BASELINES) + list(ABLATIONS) +
+                            ["relief"]))
+
+
+@pytest.mark.parametrize("name", ALL_STRATEGIES)
+def test_every_strategy_runs(setup, name):
+    ds, fleet, task, tr0, fed = setup
+    run = FedRun.create(task, tr0, get_strategy(name), fleet, fed)
+    h = run.run(ds)
+    assert len(h["round_time_s"]) == fed.rounds
+    assert np.isfinite(h["loss"]).all()
+    assert 0.0 <= h["f1"][-1] <= 1.0
+    assert h["round_time_s"][-1] > 0
+    assert h["upload_mb"][-1] >= 0
+
+
+def test_loss_decreases_over_rounds(setup):
+    ds, fleet, task, tr0, _ = setup
+    fed = FedConfig(rounds=8, local_epochs=2, steps_per_epoch=3,
+                    batch_size=32, eval_every=8)
+    run = FedRun.create(task, tr0, get_strategy("relief"), fleet, fed)
+    h = run.run(ds)
+    assert np.mean(h["loss"][-3:]) < np.mean(h["loss"][:2])
+
+
+def test_relief_faster_than_fedavg(setup):
+    ds, fleet, task, tr0, fed = setup
+    times = {}
+    for name in ("relief", "fedavg"):
+        run = FedRun.create(task, tr0, get_strategy(name), fleet, fed)
+        h = run.run(ds)
+        times[name] = np.mean(h["round_time_s"])
+    assert times["relief"] < times["fedavg"]
+
+
+def test_relief_uploads_less_than_fedavg(setup):
+    ds, fleet, task, tr0, fed = setup
+    mb = {}
+    for name in ("relief", "fedavg"):
+        run = FedRun.create(task, tr0, get_strategy(name), fleet, fed)
+        h = run.run(ds)
+        mb[name] = np.mean(h["upload_mb"])
+    assert mb["relief"] < mb["fedavg"]
+
+
+def test_client_dropout_fault_injection(setup):
+    """Cohort-resilient aggregation: random client failures never crash a
+    round and the model keeps training (fault tolerance)."""
+    ds, fleet, task, tr0, _ = setup
+    import dataclasses
+    fed = FedConfig(rounds=5, local_epochs=1, steps_per_epoch=2,
+                    batch_size=16, eval_every=5, dropout_prob=0.5, seed=3)
+    run = FedRun.create(task, tr0, get_strategy("relief"), fleet, fed)
+    h = run.run(ds)
+    assert len(h["loss"]) == 5
+    assert np.isfinite(h["loss"]).all()
+
+
+def test_partial_participation(setup):
+    ds, fleet, task, tr0, _ = setup
+    fed = FedConfig(rounds=3, local_epochs=1, steps_per_epoch=2,
+                    batch_size=16, eval_every=3, participation=0.5)
+    run = FedRun.create(task, tr0, get_strategy("relief"), fleet, fed)
+    h = run.run(ds)
+    assert np.isfinite(h["loss"]).all()
+
+
+def test_divergence_tracking_updates(setup):
+    ds, fleet, task, tr0, fed = setup
+    run = FedRun.create(task, tr0, get_strategy("relief"), fleet, fed)
+    d0 = run.state.dbar.copy()
+    run.round(ds)
+    assert not np.allclose(run.state.dbar, d0)
+    # only non-empty groups carry divergence
+    assert (run.state.dbar[task.layout.sizes == 0] <= 1e-6).all()
+
+
+def test_elastic_budgets_respect_mandatory(setup):
+    ds, fleet, task, tr0, fed = setup
+    from repro.core.engine import allocate
+    run = FedRun.create(task, tr0, get_strategy("relief"), fleet, fed)
+    S, k = allocate(run.strategy, run.state, task, fleet, fed,
+                    task.layout.flops)
+    man = task.layout.mandatory(fleet.modality_mask)
+    assert (S >= man).all()
+    assert (S.sum(1) <= np.maximum(k, man.sum(1))).all()
+    acc = task.layout.accessible(fleet.modality_mask)
+    assert (S <= acc).all()  # RELIEF never trains absent-modality groups
+
+
+def test_fedavg_trains_absent_groups(setup):
+    """The paper's Q2: classical FL wastes compute on absent-sensor params."""
+    ds, fleet, task, tr0, fed = setup
+    from repro.core.engine import allocate
+    run = FedRun.create(task, tr0, get_strategy("fedavg"), fleet, fed)
+    S, _ = allocate(run.strategy, run.state, task, fleet, fed,
+                    task.layout.flops)
+    acc = task.layout.accessible(fleet.modality_mask)
+    assert (S & ~acc).any()  # trains groups it cannot benefit from
+
+
+def test_harmony_keeps_fusion_local(setup):
+    ds, fleet, task, tr0, fed = setup
+    run = FedRun.create(task, tr0, get_strategy("harmony"), fleet, fed)
+    run.round(ds)
+    import jax.numpy as jnp
+    # global fusion weight unchanged (not federated)
+    leaves0 = jax.tree_util.tree_flatten_with_path(tr0)[0]
+    leaves1 = jax.tree_util.tree_flatten_with_path(run.state.trainable)[0]
+    for (p0, l0), (_, l1) in zip(leaves0, leaves1):
+        pstr = jax.tree_util.keystr(p0)
+        if "fusion" in pstr:
+            np.testing.assert_allclose(np.asarray(l0), np.asarray(l1))
+
+
+def test_helora_rank_masks(setup):
+    ds, fleet, _, _, fed = setup
+    cfg = mm_config_for("pamap2", backbone="transformer", d_feat=8,
+                        d_fused=32, enc_layers=1, enc_d=16, enc_ff=32)
+    task, tr0 = MMTask.create(cfg, KEY)
+    run = FedRun.create(task, tr0, get_strategy("helora"), fleet, fed)
+    h = run.run(ds)
+    assert np.isfinite(h["loss"]).all()
+    # slow clients have zeroed rank tails in their gates
+    import jax.numpy as jnp
+    ga = run.rank_gate["lora"]["fusion"]["a"]
+    slow = int(np.argmin(fleet.tops))
+    fast = int(np.argmax(fleet.tops))
+    assert float(ga[slow].sum()) < float(ga[fast].sum())
+
+
+def test_backbone2_runs(setup):
+    ds, fleet, _, _, fed = setup
+    cfg = mm_config_for("pamap2", backbone="transformer", d_feat=8,
+                        d_fused=32, enc_layers=1, enc_d=16, enc_ff=32)
+    task, tr0 = MMTask.create(cfg, KEY)
+    run = FedRun.create(task, tr0, get_strategy("relief"), fleet, fed)
+    h = run.run(ds)
+    assert np.isfinite(h["loss"]).all()
+    # B2 communicates the LoRA adapters + head only (<< full model)
+    n_full = sum(x.size for x in jax.tree.leaves(task.params(tr0)))
+    n_train = sum(x.size for x in jax.tree.leaves(tr0))
+    assert n_train < 0.5 * n_full

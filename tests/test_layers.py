@@ -1,0 +1,96 @@
+"""Unit tests for the model building blocks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_rmsnorm_unit_scale():
+    w = L.init_rmsnorm(16)
+    x = jax.random.normal(KEY, (4, 16)) * 10.0
+    y = L.rmsnorm(w, x)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), -1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-5)
+
+
+def test_layernorm_stats():
+    p = L.init_layernorm(32)
+    x = jax.random.normal(KEY, (8, 32)) * 3 + 2
+    y = L.layernorm(p, x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.std(y, -1)), 1.0, atol=1e-2)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    x = jax.random.normal(KEY, (1, 8, 2, 16))
+    pos = jnp.arange(8)
+    y = L.apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # dot products depend only on relative distance
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 1, 16))
+    # same content placed at shifted positions
+    qr1 = L.apply_rope(q, pos)
+    kr1 = L.apply_rope(k, pos)
+    qr2 = L.apply_rope(q, pos + 13)
+    kr2 = L.apply_rope(k, pos + 13)
+    d1 = jnp.einsum("bshd,bshd->bsh", qr1, kr1)
+    d2 = jnp.einsum("bshd,bshd->bsh", qr2, kr2)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4)
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = L.softcap(x, 30.0)
+    assert float(jnp.max(jnp.abs(y))) <= 30.0
+    np.testing.assert_allclose(np.asarray(L.softcap(x, None)), np.asarray(x))
+    # near-linear for small inputs
+    small = jnp.linspace(-1, 1, 11)
+    np.testing.assert_allclose(np.asarray(L.softcap(small, 50.0)),
+                               np.asarray(small), atol=1e-3)
+
+
+@pytest.mark.parametrize("q_chunk", [8, 16, 64])
+@pytest.mark.parametrize("window", [None, 16])
+def test_chunked_attention_matches_naive(q_chunk, window):
+    B, S, K, G, hd = 2, 64, 2, 2, 8
+    q = jax.random.normal(KEY, (B, S, K, G, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, K, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, K, hd))
+    pos = jnp.arange(S)
+    out = L._chunked_attention(q, k, v, pos, pos, window, None, q_chunk)
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    ref = flash_attention_ref(q, k, v, pos, pos,
+                              window or np.iinfo(np.int32).max, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_cross_entropy_matches_manual():
+    logits = jax.random.normal(KEY, (5, 11))
+    labels = jnp.array([0, 3, 10, 2, 7])
+    got = L.cross_entropy_logits(logits, labels)
+    p = jax.nn.log_softmax(logits)
+    want = -jnp.mean(p[jnp.arange(5), labels])
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-6)
+
+
+def test_cross_entropy_mask():
+    logits = jax.random.normal(KEY, (4, 7))
+    labels = jnp.array([1, 2, 3, 4])
+    mask = jnp.array([1.0, 1.0, 0.0, 0.0])
+    got = L.cross_entropy_logits(logits, labels, mask)
+    want = L.cross_entropy_logits(logits[:2], labels[:2])
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-6)
+
+
+def test_conv1d_causality_and_shape():
+    p = L.init_conv1d(KEY, 3, 5, 3)
+    x = jax.random.normal(KEY, (2, 16, 3))
+    y = L.conv1d(p, x, stride=2)
+    assert y.shape == (2, 8, 5)
