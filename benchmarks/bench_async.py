@@ -1,0 +1,131 @@
+"""Async runtime sweep: buffer size x staleness exponent x heterogeneity,
+against the synchronous engine under the identical device model.
+
+For each heterogeneity scale the sync FedAvg / sync RELIEF baselines come
+from the shared run cache (benchmarks/common.py); each async cell runs the
+event-driven engine for the same total client work (rounds * N updates) and
+reports
+
+  * total simulated wall-clock for that work (straggler decoupling),
+  * wall-clock speedup vs sync FedAvg,
+  * time-to-target-loss speedup (target = sync FedAvg's final loss),
+  * final F1, fleet energy, upload volume, mean staleness.
+
+Output: benchmarks/results/async_sweep.{json,csv} (schema-stable; the CI
+smoke artifact includes the JSON).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from benchmarks.common import (RESULTS_DIR, SCHEMA_VERSION, BenchSpec,
+                               fmt_table, run_spec, save_csv, write_json)
+
+
+def _async_cell(spec: BenchSpec, buffer_size: int, staleness_exp: float,
+                rounds: int) -> dict:
+    import jax
+
+    from repro.core.async_engine import AsyncFedConfig, AsyncFedRun
+    from repro.core.strategies import async_relief
+    from repro.core.tasks import MMTask
+    from repro.data import make_har_dataset, mm_config_for
+    from repro.sim import make_fleet
+
+    ds = make_har_dataset(spec.dataset, windows_per_subject=spec.windows,
+                          seed=spec.seed)
+    n_low = 2 if spec.dataset == "pamap2" else 4
+    fleet = make_fleet(3, 3, n_low, M=4, hetero_scale=spec.hetero_scale)
+    cfg = mm_config_for(spec.dataset, backbone="cnn", d_feat=16, d_fused=64,
+                        cnn_ch=(16, 32))
+    task, tr0 = MMTask.create(cfg, jax.random.PRNGKey(spec.seed))
+    fed = AsyncFedConfig(rounds=rounds, eval_every=0, seed=spec.seed,
+                         utilization=2e-5, t_overhead=1e-3,
+                         sim_mode=spec.sim_mode)
+    run = AsyncFedRun.create(
+        task, tr0, async_relief(buffer_size=buffer_size,
+                                staleness_exponent=staleness_exp),
+        fleet, fed)
+    h = run.run(ds)
+    return {"history": h, "run": run, "fleet": fleet}
+
+
+def _time_to_loss(times, losses, target: float, window: int = 3):
+    if len(losses) < window:
+        return None
+    sm = np.convolve(losses, np.ones(window) / window, mode="valid")
+    hit = np.where(sm <= target)[0]
+    if hit.size == 0:
+        return None
+    return float(times[int(hit[0]) + window - 1])
+
+
+def run(rounds: int = 8, quick: bool = False, seed: int = 0) -> list[dict]:
+    hetero_scales = (100.0,) if quick else (10.0, 100.0)
+    buffers = (2, 8) if quick else (1, 2, 4, 8)
+    exponents = (0.5,) if quick else (0.0, 0.5, 1.0)
+    rounds = min(rounds, 4) if quick else rounds
+
+    rows = []
+    for hs in hetero_scales:
+        spec = BenchSpec("fedavg", "pamap2", "b1", rounds, seed,
+                         hetero_scale=hs)
+        base = run_spec(spec)
+        sync_total = float(np.sum(base["round_times"]))
+        sync_target = float(np.mean(base["loss_curve"][-2:]))
+        relief_row = run_spec(dataclasses.replace(spec, method="relief"))
+        relief_total = float(np.sum(relief_row["round_times"]))
+        print(f"[bench_async] hetero={hs:.0f}x sync fedavg "
+              f"T={sync_total:.3f}s relief T={relief_total:.3f}s "
+              f"target loss {sync_target:.3f}")
+        for K in buffers:
+            for a in exponents:
+                cell = _async_cell(spec, K, a, rounds)
+                h = cell["history"]
+                t_total = float(cell["run"].state.sim_time)
+                tta = _time_to_loss(h["sim_time_s"], h["loss"], sync_target)
+                rows.append({
+                    "hetero_scale": hs, "buffer_size": K,
+                    "staleness_exponent": a, "rounds": rounds,
+                    "sim_time_s": t_total,
+                    "speedup_vs_sync_fedavg": sync_total / max(t_total, 1e-12),
+                    "speedup_vs_sync_relief": relief_total / max(t_total,
+                                                                 1e-12),
+                    "tta_loss_s": tta if tta is not None else "-",
+                    "tta_speedup": (sync_total / tta) if tta else "-",
+                    "f1": h["f1"][-1],
+                    "energy_j": h["energy_j"][-1],
+                    "upload_mb": h["upload_mb"][-1],
+                    "staleness_mean": float(np.mean(h["staleness_mean"])),
+                    "flushes": int(cell["run"].state.round),
+                })
+                print(f"  K={K} a={a}: T={t_total:.3f}s "
+                      f"({rows[-1]['speedup_vs_sync_fedavg']:.1f}x fedavg) "
+                      f"F1 {rows[-1]['f1']:.3f} "
+                      f"stale {rows[-1]['staleness_mean']:.2f}")
+
+    cols = [("hetero", "hetero_scale"), ("K", "buffer_size"),
+            ("a", "staleness_exponent"), ("T_sim", "sim_time_s"),
+            ("xFedAvg", "speedup_vs_sync_fedavg"),
+            ("xRELIEF", "speedup_vs_sync_relief"), ("TTA_x", "tta_speedup"),
+            ("F1", "f1"), ("stale", "staleness_mean")]
+    print(fmt_table(rows, cols, "Async sweep (event-driven runtime)"))
+    fields = [k for _, k in cols] + ["tta_loss_s", "energy_j", "upload_mb",
+                                     "flushes", "rounds"]
+    save_csv(rows, os.path.join(RESULTS_DIR, "async_sweep.csv"), fields)
+    write_json(os.path.join(RESULTS_DIR, "async_sweep.json"),
+               {"schema_version": SCHEMA_VERSION, "bench": "async_sweep",
+                "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(a.rounds, quick=a.quick)

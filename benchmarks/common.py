@@ -21,6 +21,19 @@ import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
+# bump when the shape of any emitted JSON changes — CI artifact consumers
+# (and the run cache) key on this
+SCHEMA_VERSION = 1
+
+
+def write_json(path: str, payload: dict) -> None:
+    """Schema-stable JSON emission: every document carries schema_version
+    and sorted keys, so artifact diffs are meaningful across CI runs."""
+    payload.setdefault("schema_version", SCHEMA_VERSION)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+
 RARE_MODALITIES = {"pamap2": ("mag", "hr"), "mhealth": ("mag", "ecg")}
 
 # method display names / citations (paper Tables I-II rows)
@@ -98,7 +111,11 @@ def run_spec(spec: BenchSpec, force: bool = False, verbose: bool = True) -> dict
     cache = os.path.join(RESULTS_DIR, "runs", spec.key() + ".json")
     if os.path.exists(cache) and not force:
         with open(cache) as f:
-            return json.load(f)
+            cached = json.load(f)
+        if cached.get("schema_version") == SCHEMA_VERSION:
+            return cached
+        # schema drift: fall through and re-run so consumers never see a
+        # mixed-version document
 
     from repro.core import metrics as M
 
@@ -110,6 +127,7 @@ def run_spec(spec: BenchSpec, force: bool = False, verbose: bool = True) -> dict
     per_mod = task.eval_per_modality(run.state.trainable, xs, ys)
     rare = M.rare_modality_f1(per_mod, RARE_MODALITIES[spec.dataset])
     out = {
+        "schema_version": SCHEMA_VERSION,
         "spec": dataclasses.asdict(spec),
         "f1": hist["f1"][-1],
         "f1_curve": hist["f1"],

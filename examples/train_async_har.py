@@ -1,0 +1,86 @@
+"""End-to-end driver for the event-driven asynchronous runtime.
+
+Runs RELIEF-style divergence-guided allocation under buffered,
+staleness-discounted cohort aggregation on a heterogeneous fleet, and
+prints the simulated wall-clock/energy comparison against a synchronous
+FedAvg run doing the same total client work.
+
+  PYTHONPATH=src python examples/train_async_har.py \
+      [--rounds 50] [--buffer 4] [--staleness-exp 0.5] [--hetero 100]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core.async_engine import AsyncFedConfig, AsyncFedRun
+from repro.core.engine import FedConfig, FedRun
+from repro.core.strategies import async_relief, get_strategy
+from repro.core.tasks import MMTask
+from repro.data import make_har_dataset, mm_config_for
+from repro.sim import make_fleet
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=50,
+                    help="logical rounds: total work = rounds * N updates")
+    ap.add_argument("--dataset", default="pamap2")
+    ap.add_argument("--buffer", type=int, default=4,
+                    help="server buffer size K (flush threshold)")
+    ap.add_argument("--staleness-exp", type=float, default=0.5,
+                    help="a in the 1/(1+s)^a staleness discount")
+    ap.add_argument("--hetero", type=float, default=100.0,
+                    help="Full/Low compute gap (paper Tables IV-V)")
+    ap.add_argument("--jitter", type=float, default=0.0,
+                    help="lognormal compute-time noise sigma")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    ds = make_har_dataset(args.dataset, windows_per_subject=200,
+                          seed=args.seed)
+    n_low = 2 if args.dataset == "pamap2" else 4
+    fleet = make_fleet(3, 3, n_low, M=4, hetero_scale=args.hetero)
+    cfg = mm_config_for(args.dataset, backbone="cnn", d_feat=16, d_fused=64,
+                        cnn_ch=(16, 32))
+    task, tr0 = MMTask.create(cfg, jax.random.PRNGKey(args.seed))
+    print(f"[async driver] {args.dataset}: fleet N={fleet.N} "
+          f"({args.hetero:.0f}x compute gap), G={task.layout.G} groups, "
+          f"K={args.buffer}, a={args.staleness_exp}")
+
+    # --- synchronous FedAvg reference (same device model, same total work)
+    sfed = FedConfig(rounds=args.rounds, eval_every=max(args.rounds // 5, 1),
+                     seed=args.seed, utilization=2e-5, t_overhead=1e-3)
+    sync = FedRun.create(task, tr0, get_strategy("fedavg"), fleet, sfed)
+    hs = sync.run(ds)
+    sync_total = float(np.sum(hs["round_time_s"]))
+    print(f"[sync fedavg ] {args.rounds} rounds in simulated "
+          f"{sync_total:9.2f}s  F1 {hs['f1'][-1]:.3f}  "
+          f"E {np.sum(hs['energy_j']):.0f}J")
+
+    # --- event-driven run
+    afed = AsyncFedConfig(rounds=args.rounds,
+                          eval_every=max(args.rounds // 2, 1),
+                          seed=args.seed, utilization=2e-5, t_overhead=1e-3,
+                          jitter_sigma=args.jitter)
+    arun = AsyncFedRun.create(
+        task, tr0, async_relief(buffer_size=args.buffer,
+                                staleness_exponent=args.staleness_exp),
+        fleet, afed)
+    ha = arun.run(ds, log_every=max(args.rounds * fleet.N
+                                    // args.buffer // 10, 1))
+    async_total = float(arun.state.sim_time)
+    print(f"[async relief] {arun.state.round} flushes "
+          f"({arun.trace.completions} updates) in simulated "
+          f"{async_total:9.2f}s  F1 {ha['f1'][-1]:.3f}  "
+          f"E {arun.trace.energy_j:.0f}J")
+    print(f"[async driver] wall-clock speedup vs sync FedAvg: "
+          f"{sync_total / max(async_total, 1e-12):.1f}x  "
+          f"(mean staleness {np.mean(ha['staleness_mean']):.2f}, "
+          f"fast/slow update ratio "
+          f"{arun.trace.per_client_updates.max()}"
+          f"/{max(arun.trace.per_client_updates.min(), 1)})")
+
+
+if __name__ == "__main__":
+    main()

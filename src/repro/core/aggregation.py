@@ -25,12 +25,16 @@ Array = jax.Array
 
 
 def cohort_weights(layout: mdlora.GroupLayout, trained: Array,
-                   modality_mask: Array) -> Array:
+                   modality_mask: Array,
+                   client_scale: Array | None = None) -> Array:
     """RELIEF combine weights W: [N, G].
 
     trained: [N, G] float/bool — which groups each client trained+uploaded
     (the active cohort C~_m^r for fusion blocks / encoders).
     modality_mask: [N, M] — possession, for Eq. 4's w_n = (|M_n|/M)/sum(...).
+    client_scale: optional [N] multiplicative per-client weight applied
+    *inside* the normalization (the async runtime passes its staleness
+    discounts here, so a stale update shrinks relative to its cohort).
     Empty cohort => all-zero column (the block stays frozen this round).
     """
     trained = jnp.asarray(trained, jnp.float32)
@@ -41,8 +45,17 @@ def cohort_weights(layout: mdlora.GroupLayout, trained: Array,
 
     u = jnp.where(is_b[None, :], (mcount / M)[:, None], 1.0)  # [N, G]
     w = trained * u
+    if client_scale is not None:
+        w = w * jnp.asarray(client_scale, jnp.float32)[:, None]
     denom = jnp.sum(w, axis=0, keepdims=True)  # [1, G]
     return jnp.where(denom > 0, w / jnp.maximum(denom, 1e-12), 0.0)
+
+
+def staleness_discounts(staleness: Array, exponent: float) -> Array:
+    """FedBuff-style polynomial staleness discount 1/(1+s)^a. s is measured
+    in server model versions (flushes) since the client pulled."""
+    s = jnp.asarray(staleness, jnp.float32)
+    return 1.0 / jnp.power(1.0 + s, exponent)
 
 
 def fedavg_weights(n_clients: int, G: int, participating: Array | None = None
@@ -61,6 +74,107 @@ def aggregate(layout: mdlora.GroupLayout, global_trainable: Any,
     return jax.tree.map(
         lambda t, d: (t.astype(jnp.float32) + server_lr * d).astype(t.dtype),
         global_trainable, agg)
+
+
+# ---------------------------------------------------------------------------
+# streaming cohort aggregation (async runtime / fleet-scale server)
+# ---------------------------------------------------------------------------
+
+
+class CohortAggBuffer:
+    """Streaming/accumulating variant of the fused cohort-agg reduction.
+
+    The synchronous engine materializes the full [N, ...] delta stack and
+    reduces it in one shot; the async runtime receives *partial buffers*
+    (FedBuff cohorts of K clients) and at fleet scale even a sync server
+    would stream arrivals. This class accumulates Eq. 3 aggregates and the
+    Eq. 5 divergence sufficient statistics chunk by chunk:
+
+        push(deltas [K,...], W [K,G], C [K,G])   any number of times
+        finalize() -> (agg tree, divergence [G], cohort counts [G])
+
+    The row-blocked fusion leaf goes through ``kernels/cohort_agg`` —
+    ``impl="pallas"`` runs the fused Pallas kernel (interpret-mode on CPU),
+    ``impl="xla"`` its einsum oracle; both produce the aggregate and the
+    per-row (sqsum, mean, count) stats in one pass over the chunk. All other
+    leaves use the same masked einsum reductions as ``weighted_combine``.
+    Empty cohorts finalize to zero aggregate and zero divergence (frozen
+    block), never NaN.
+    """
+
+    def __init__(self, layout: mdlora.GroupLayout, proto: Any,
+                 impl: str = "xla", interpret: bool = True, bd: int = 256):
+        self.layout = layout
+        self.impl = impl
+        self.interpret = interpret
+        self.bd = bd
+        self._agg = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), proto)
+        self._csum = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), proto)
+        self._sq = jnp.zeros((layout.G,), jnp.float32)
+        self._cnt = jnp.zeros((layout.G,), jnp.float32)
+
+    def push(self, deltas: Any, W: Array, C: Array) -> None:
+        """deltas: client-stacked pytree ([K, ...] leaves); W/C: [K, G]
+        combine weights and divergence-cohort mask for this chunk."""
+        from repro.kernels.cohort_agg import cohort_agg_divergence
+
+        layout = self.layout
+        W = jnp.asarray(W, jnp.float32)
+        C = jnp.asarray(C, jnp.float32)
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(deltas)
+        agg_out, csum_out = [], []
+        sq = jnp.zeros((layout.G,), jnp.float32)
+        for path, leaf in leaves:
+            p = mdlora.path_str(path)
+            x = leaf.astype(jnp.float32)
+            if p == layout.fusion_a_path:
+                rg = layout.row_group_vector(leaf.shape[1])
+                rg_j = jnp.asarray(rg)
+                bd = leaf.shape[1] if leaf.shape[1] % self.bd else self.bd
+                agg_a, sq_rows, mean_rows, cnt_rows = cohort_agg_divergence(
+                    x, W[:, rg_j], C[:, rg_j], impl=self.impl,
+                    interpret=self.interpret, bd=bd)
+                agg_out.append(agg_a)
+                csum_out.append(mean_rows * cnt_rows[:, None])
+                sq = sq.at[rg_j].add(sq_rows)
+            elif p in layout.leaf_axis0_groups:
+                ids = jnp.asarray(layout.leaf_axis0_groups[p])
+                agg_out.append(jnp.einsum("nl,nl...->l...", W[:, ids], x))
+                csum_out.append(jnp.einsum("nl,nl...->l...", C[:, ids], x))
+                per_l = jnp.sum(jnp.square(x),
+                                axis=tuple(range(2, x.ndim)))  # [K, L]
+                sq = sq.at[ids].add(jnp.sum(per_l * C[:, ids], axis=0))
+            elif p in layout.leaf_group:
+                g = layout.leaf_group[p]
+                agg_out.append(jnp.einsum("n,n...->...", W[:, g], x))
+                csum_out.append(jnp.einsum("n,n...->...", C[:, g], x))
+                per_n = jnp.sum(jnp.square(x),
+                                axis=tuple(range(1, x.ndim)))  # [K]
+                sq = sq.at[g].add(jnp.sum(per_n * C[:, g]))
+            else:
+                agg_out.append(jnp.zeros(leaf.shape[1:], jnp.float32))
+                csum_out.append(jnp.zeros(leaf.shape[1:], jnp.float32))
+        agg_tree = jax.tree_util.tree_unflatten(treedef, agg_out)
+        csum_tree = jax.tree_util.tree_unflatten(treedef, csum_out)
+        self._agg = jax.tree.map(jnp.add, self._agg, agg_tree)
+        self._csum = jax.tree.map(jnp.add, self._csum, csum_tree)
+        self._sq = self._sq + sq
+        self._cnt = self._cnt + jnp.sum(C, axis=0)
+
+    def finalize(self) -> tuple[Any, Array, Array]:
+        """-> (aggregate tree, per-group divergence [G], cohort counts [G]).
+
+        Divergence uses the sufficient-statistics identity
+        E||d - mean||^2 = E||d||^2 - ||mean||^2 over each group's cohort.
+        """
+        cnt = self._cnt
+        inv = 1.0 / jnp.maximum(cnt, 1.0)
+        mean_tree = mdlora.group_gate_tree(self.layout, self._csum, inv)
+        msq = mdlora.group_norms(self.layout, mean_tree)
+        d = jnp.where(cnt > 0, jnp.maximum(self._sq * inv - msq, 0.0), 0.0)
+        return self._agg, d, cnt
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,300 @@
+"""Event-driven asynchronous federated runtime (RELIEF beyond the barrier).
+
+The synchronous engine (core/engine.py) charges every round to its slowest
+device — exactly the straggler coupling the paper identifies as the cost of
+system-modality heterogeneity. This runtime removes the barrier: each client
+trains continuously against the freshest model it has pulled, completions
+arrive on a priority queue of simulated (compute + comm) times
+(sim/events.py), and the server applies *buffered, staleness-discounted
+cohort aggregation*:
+
+  * a FedBuff-style buffer of size K — the server folds the model forward
+    once K completions are queued (K = N + homogeneous fleet degenerates to
+    the synchronous engine, the parity anchor in tests/test_async_engine.py);
+  * each buffered update is discounted by 1/(1+s)^a where s counts server
+    versions elapsed since the client pulled (strategies.AsyncStrategy);
+  * aggregation reuses the mdlora.GroupLayout block interface through the
+    streaming ``aggregation.CohortAggBuffer``, so rare-modality blocks still
+    aggregate only within their possession cohort and an empty cohort
+    freezes its block — no interference, no NaNs, no matter which subset of
+    the fleet happens to sit in the buffer.
+
+Simulated time and energy come from the same device model as the sync
+engine (sim/timing.py), so bench_async.py's wall-clock/energy comparisons
+are apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as AG
+from repro.core import mdlora
+from repro.core.engine import (FedConfig, _PROTO_CACHE, _rank_gates,
+                               allocate, draw_client_batches,
+                               make_local_update)
+from repro.core.strategies import AsyncStrategy
+from repro.core.tasks import MMTask
+from repro.sim import FleetConfig
+from repro.sim.events import AsyncTrace, EventQueue, completion_times
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncFedConfig(FedConfig):
+    """FedConfig + event-runtime knobs. ``rounds`` keeps its meaning as the
+    *logical* round budget: the default total work is rounds * N client
+    updates, matching the synchronous engine's total local compute."""
+    jitter_sigma: float = 0.0  # lognormal compute-time noise (0 = exact)
+    total_updates: int | None = None  # overrides rounds * N when set
+    agg_impl: str = "xla"  # cohort-agg reduction: "xla" | "pallas"
+    agg_interpret: bool = True  # Pallas interpret mode (CPU containers)
+
+
+@dataclasses.dataclass
+class AsyncFedState:
+    round: int  # server model version = number of flushes applied
+    trainable: Any
+    dbar: np.ndarray  # [G] EMA divergence (drives allocation, Eq. 5-6)
+    mag_ema: np.ndarray  # [G]
+    rng: np.random.Generator
+    sim_time: float = 0.0
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One in-flight client update, created at dispatch (the delta is a pure
+    function of the pulled model + batch draw, so simulation computes it
+    eagerly; only its *arrival time* is event-driven)."""
+    client: int
+    version: int  # server version pulled at dispatch
+    delta: Any  # trainable-shaped update
+    loss: float
+    S_row: np.ndarray  # [G] groups trained
+    t_comp: float
+    t_comm: float
+    upload_bytes: float
+
+
+@dataclasses.dataclass
+class AsyncFedRun:
+    task: MMTask
+    strategy: AsyncStrategy
+    fleet: FleetConfig
+    fed: AsyncFedConfig
+    state: AsyncFedState
+    local_update: Any
+    rank_gate: Any
+    queue: EventQueue
+    buffer: list
+    trace: AsyncTrace
+    history: dict
+
+    @classmethod
+    def create(cls, task: MMTask, trainable0: Any, strategy: AsyncStrategy,
+               fleet: FleetConfig, fed: AsyncFedConfig) -> "AsyncFedRun":
+        if strategy.personal or strategy.share_only:
+            raise ValueError("async runtime keeps one global model; "
+                             "personalized strategies are sync-only")
+        if strategy.agg not in ("cohort", "fedavg"):
+            raise ValueError(f"async runtime supports cohort/fedavg "
+                             f"aggregation, not {strategy.agg!r}")
+        _PROTO_CACHE[id(task)] = trainable0
+        G = task.layout.G
+        state = AsyncFedState(
+            round=0, trainable=trainable0, dbar=np.ones(G) * 1e-6,
+            mag_ema=np.ones(G), rng=np.random.default_rng(fed.seed))
+        trace = AsyncTrace()
+        trace.init_fleet(fleet.N)
+        history = {"flush": [], "loss": [], "sim_time_s": [], "energy_j": [],
+                   "upload_mb": [], "staleness_mean": [], "f1": [],
+                   "f1_flush": [], "divergence": [], "selected_frac": []}
+        return cls(task, strategy, fleet, fed, state,
+                   make_local_update(task, fed, strategy.prox_mu),
+                   _rank_gates(task, strategy, fleet), EventQueue(), [],
+                   trace, history)
+
+    # -- client dispatch ------------------------------------------------------
+
+    def _dispatch(self, clients: np.ndarray, now: float, dataset) -> None:
+        """Pull the current model to ``clients``, run their local training
+        eagerly, and schedule their completion events."""
+        task, fed, fleet = self.task, self.fed, self.fleet
+        layout, state = task.layout, self.state
+        clients = np.asarray(clients, np.int64)
+        K = len(clients)
+        if K == 0:
+            return
+
+        S_full, _ = allocate(self.strategy, state, task, fleet, fed,
+                             layout.flops)
+        S = S_full[clients]  # [K, G]
+
+        steps = fed.local_epochs * fed.steps_per_epoch
+        batches = draw_client_batches(state.rng, dataset, clients, steps,
+                                      fed.batch_size)
+        start = jax.tree.map(
+            lambda g: jnp.broadcast_to(g, (K,) + g.shape), state.trainable)
+        gates = jnp.asarray(S, jnp.float32)
+        mmasks = jnp.asarray(fleet.modality_mask[clients], jnp.float32)
+        rank_gate = jax.tree.map(lambda x: x[clients], self.rank_gate)
+        deltas, losses = self.local_update(start, batches, mmasks, gates,
+                                           rank_gate, fed.lr)
+
+        examples = steps * fed.batch_size
+        if fed.sim_mode == "flop_proportional":
+            k_count = np.asarray(S, np.float64).sum(1)
+            trained_fl = k_count * float(np.mean(layout.flops)) * examples * 3.0
+            fixed_fl = np.zeros(K)
+        else:  # fwd_aware
+            trained_fl = (np.asarray(S, np.float64) @ layout.flops
+                          ) * examples * 2.0
+            fixed_fl = np.full(K, task.forward_flops_per_example() * examples)
+        upload = (np.asarray(S, np.float64) @ layout.sizes) * 4.0
+        dur, t_comp, t_comm = completion_times(
+            fleet, clients, trained_fl, fixed_fl, upload, fed.t_overhead,
+            fed.utilization, self.fed.jitter_sigma, state.rng)
+
+        losses_np = np.asarray(losses)
+        for i, c in enumerate(clients):
+            pend = _Pending(int(c), state.round,
+                            jax.tree.map(lambda x: x[i], deltas),
+                            float(losses_np[i]), S[i], float(t_comp[i]),
+                            float(t_comm[i]), float(upload[i]))
+            self.queue.push(now + dur[i], int(c), payload=pend)
+
+    # -- server flush ---------------------------------------------------------
+
+    def _flush(self) -> dict:
+        """Fold the buffered cohort into the global model (one server
+        version). Buffered entries are stacked in client-id order so a full
+        homogeneous buffer reproduces the synchronous stack exactly."""
+        task, fleet, fed = self.task, self.fleet, self.fed
+        layout, state = task.layout, self.state
+        entries = sorted(self.buffer, key=lambda e: e.client)
+        self.buffer = []
+        K = len(entries)
+
+        deltas = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[e.delta for e in entries])
+        S = np.stack([e.S_row for e in entries])  # [K, G]
+        client_ids = np.array([e.client for e in entries])
+        staleness = np.array([state.round - e.version for e in entries],
+                             np.float64)
+        fresh = np.ones(K, bool)
+        if self.strategy.max_staleness is not None:
+            fresh = staleness <= self.strategy.max_staleness
+            S = S * fresh[:, None]
+        trained = jnp.asarray(S, jnp.float32)
+        mmask = jnp.asarray(fleet.modality_mask[client_ids], jnp.float32)
+
+        a = self.strategy.staleness_exponent
+        scale = (None if a == 0.0
+                 else AG.staleness_discounts(staleness, a))
+        if self.strategy.agg == "cohort":
+            W = AG.cohort_weights(layout, trained, mmask, client_scale=scale)
+        else:  # fedavg: every (fresh) buffered client into every non-empty
+            # group — max_staleness drops apply here too
+            ones = jnp.asarray(
+                np.tile(layout.sizes[None, :] > 0, (K, 1))
+                & fresh[:, None], jnp.float32)
+            W = AG.cohort_weights(layout, ones, jnp.ones_like(mmask),
+                                  client_scale=scale)
+
+        # divergence cohort: possession AND trained (paper Eq. 5 on the
+        # buffered subset)
+        acc = layout.accessible(fleet.modality_mask[client_ids])
+        C = jnp.asarray(acc & (S > 0), jnp.float32)
+
+        agg = AG.CohortAggBuffer(layout, state.trainable,
+                                 impl=fed.agg_impl,
+                                 interpret=fed.agg_interpret)
+        agg.push(deltas, W, C)
+        agg_tree, d, cnt = agg.finalize()
+
+        state.trainable = jax.tree.map(
+            lambda t, g: (t.astype(jnp.float32)
+                          + fed.server_lr * g).astype(t.dtype),
+            state.trainable, agg_tree)
+
+        d_np = np.asarray(d)
+        touched = np.asarray(cnt) > 0
+        state.dbar[touched] = (fed.gamma * d_np
+                               + (1.0 - fed.gamma) * state.dbar)[touched]
+        per_client_norms = np.asarray(jax.vmap(
+            lambda t: mdlora.group_norms(layout, t))(deltas))
+        denom = np.maximum(S.sum(0), 1)
+        mag = (per_client_norms * S).sum(0) / denom
+        sel = S.any(0)
+        state.mag_ema[sel] = (0.5 * state.mag_ema + 0.5 * mag)[sel]
+
+        state.round += 1
+        self.trace.flushes += 1
+        rec = {"flush": state.round, "sim_time_s": state.sim_time,
+               "loss": float(np.mean([e.loss for e in entries])),
+               "staleness_mean": float(staleness.mean()),
+               "energy_j": self.trace.energy_j,
+               "upload_mb": self.trace.upload_mb,
+               "selected_frac": float(S.mean()), "divergence": d_np}
+        for key in ("flush", "loss", "sim_time_s", "energy_j", "upload_mb",
+                    "staleness_mean", "selected_frac", "divergence"):
+            self.history[key].append(rec[key])
+        return rec
+
+    # -- the event loop -------------------------------------------------------
+
+    def run(self, dataset, total_updates: int | None = None,
+            log_every: int = 0) -> dict:
+        """Process client completions until ``total_updates`` of them have
+        been absorbed (default: rounds * N, the sync engine's total work)."""
+        fed, fleet = self.fed, self.fleet
+        total = (total_updates or fed.total_updates
+                 or fed.rounds * fleet.N)
+        K = max(1, min(self.strategy.buffer_size, fleet.N))
+        if not len(self.queue):
+            self._dispatch(np.arange(fleet.N), self.state.sim_time, dataset)
+        processed = 0
+        while processed < total and self.queue:
+            events = self.queue.pop_simultaneous()
+            now = events[0].time
+            self.state.sim_time = now
+            completed = []
+            for ev in events:
+                pend: _Pending = ev.payload
+                self.buffer.append(pend)
+                self.trace.record_completion(fleet, ev.client, pend.t_comp,
+                                             pend.t_comm, pend.upload_bytes)
+                processed += 1
+                completed.append(ev.client)
+                if len(self.buffer) >= K:
+                    rec = self._flush()
+                    if (log_every and rec["flush"] % log_every == 0):
+                        print(f"[{self.strategy.name}] flush "
+                              f"{rec['flush']:5d} t={rec['sim_time_s']:9.3f}s"
+                              f" loss {rec['loss']:.4f} "
+                              f"stale {rec['staleness_mean']:.1f}")
+                    if (self.fed.eval_every
+                            and rec["flush"] % self.fed.eval_every == 0):
+                        self.history["f1"].append(self.evaluate(dataset))
+                        self.history["f1_flush"].append(rec["flush"])
+                if processed >= total:
+                    break
+            if processed < total:
+                self._dispatch(np.array(completed), now, dataset)
+        self.trace.sim_time = self.state.sim_time
+        if not self.history["f1"]:
+            self.history["f1"].append(self.evaluate(dataset))
+            self.history["f1_flush"].append(self.state.round)
+        return self.history
+
+    # -- evaluation -----------------------------------------------------------
+
+    def evaluate(self, dataset) -> float:
+        xs = np.concatenate(dataset.test_x)
+        ys = np.concatenate(dataset.test_y)
+        return self.task.eval_f1(self.state.trainable, xs, ys)

@@ -103,6 +103,26 @@ def make_local_update(task: MMTask, fed: FedConfig, prox_mu: float):
 
 
 # ---------------------------------------------------------------------------
+# data plumbing (shared with the async runtime: identical rng call sequence
+# per client => the sync-parity test is bit-for-bit)
+# ---------------------------------------------------------------------------
+
+
+def draw_client_batches(rng: np.random.Generator, dataset, clients,
+                        steps: int, batch_size: int) -> dict:
+    """Stacked local-training batches for ``clients`` (one rng.integers call
+    per client, in iteration order)."""
+    xs, ys = [], []
+    for n in clients:
+        src = n % len(dataset.train_y)
+        idx = rng.integers(0, len(dataset.train_y[src]),
+                           size=(steps, batch_size))
+        xs.append(dataset.train_x[src][idx])
+        ys.append(dataset.train_y[src][idx])
+    return {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))}
+
+
+# ---------------------------------------------------------------------------
 # allocation dispatch
 # ---------------------------------------------------------------------------
 
@@ -274,15 +294,8 @@ class FedRun:
     def _round_batches(self, dataset) -> dict:
         fed, fleet = self.fed, self.fleet
         steps = fed.local_epochs * fed.steps_per_epoch
-        xs, ys = [], []
-        for n in range(fleet.N):
-            idx = self.state.rng.integers(
-                0, len(dataset.train_y[n % len(dataset.train_y)]),
-                size=(steps, fed.batch_size))
-            src = n % len(dataset.train_y)
-            xs.append(dataset.train_x[src][idx])
-            ys.append(dataset.train_y[src][idx])
-        return {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))}
+        return draw_client_batches(self.state.rng, dataset,
+                                   range(fleet.N), steps, fed.batch_size)
 
     # -- one round ------------------------------------------------------------
 

@@ -141,6 +141,63 @@ def fedlease_like() -> Strategy:
                     personal=("lora",), cluster_mix=True)
 
 
+# ---------------------------------------------------------------------------
+# asynchronous (event-driven) strategies — consumed by core/async_engine.py
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncStrategy(Strategy):
+    """Strategy + the event-driven runtime's knobs.
+
+    buffer_size         K: server aggregates once K completions are buffered
+                        (FedBuff-style). K = N with a homogeneous fleet
+                        degenerates to the synchronous engine.
+    staleness_exponent  a in the polynomial discount 1/(1+s)^a, s = server
+                        versions elapsed since the client pulled its model.
+                        a = 0 disables discounting.
+    max_staleness       drop (never aggregate) updates staler than this;
+                        None = keep everything.
+    """
+    buffer_size: int = 4
+    staleness_exponent: float = 0.5
+    max_staleness: int | None = None
+
+
+def async_relief(buffer_size: int = 4, staleness_exponent: float = 0.5,
+                 **kw) -> AsyncStrategy:
+    """RELIEF's allocation + cohort aggregation on the async runtime."""
+    return AsyncStrategy("async_relief", alloc="divergence",
+                         budgets="elastic", agg="cohort", mandatory=True,
+                         buffer_size=buffer_size,
+                         staleness_exponent=staleness_exponent, **kw)
+
+
+def async_accessible(buffer_size: int = 4, staleness_exponent: float = 0.5,
+                     **kw) -> AsyncStrategy:
+    """Modality-aware async without elastic budgeting (V1 analog)."""
+    return AsyncStrategy("async_accessible", alloc="accessible",
+                         budgets="none", agg="cohort", mandatory=True,
+                         buffer_size=buffer_size,
+                         staleness_exponent=staleness_exponent, **kw)
+
+
+def async_fedbuff(buffer_size: int = 4, staleness_exponent: float = 0.5,
+                  **kw) -> AsyncStrategy:
+    """FedBuff (Nguyen et al.): modality-UNAWARE buffered async FedAvg —
+    every buffered client averaged into every group with the staleness
+    discount as its only weighting."""
+    return AsyncStrategy("async_fedbuff", alloc="full", budgets="none",
+                         agg="fedavg", buffer_size=buffer_size,
+                         staleness_exponent=staleness_exponent, **kw)
+
+
+ASYNC_STRATEGIES = {
+    "async_relief": async_relief, "async_accessible": async_accessible,
+    "async_fedbuff": async_fedbuff,
+}
+
+
 ALL_BASELINES = {
     "fedavg": fedavg, "fedprox": fedprox, "fedel": fedel_like,
     "fedicu": fedicu_like, "darkdistill": darkdistill_like,
@@ -161,4 +218,6 @@ def get_strategy(name: str) -> Strategy:
         return ABLATIONS[name]()
     if name in ALL_BASELINES:
         return ALL_BASELINES[name]()
+    if name in ASYNC_STRATEGIES:
+        return ASYNC_STRATEGIES[name]()
     raise ValueError(f"unknown strategy {name}")

@@ -1,0 +1,204 @@
+"""Partition-spec construction for the production meshes (launch/mesh.py).
+
+Three strategies, picked per (arch, step-kind) by ``pick_strategy``:
+
+  fsdp        params sharded over the data axes (ZeRO-3-style; moments
+              follow their params via ``opt_state_specs`` = ZeRO-1)
+  tp          params sharded over the ``model`` axis (Megatron-style);
+              the serving default — decode batches are too small to feed
+              the data axis
+  replicated  small models: replicate params, shard only the batch
+
+Specs are pure ``PartitionSpec`` trees built from ``mesh.axis_names`` and
+``mesh.shape`` only (dry-runnable against fake meshes); ``to_named`` binds
+them to a real mesh. A dim is only ever sharded when the axis product
+divides it — jit input requirement — so every produced spec is valid by
+construction.
+
+``act_hint`` is the activation-sharding hook the model code calls with
+logical axis labels ("batch" / "model" / "model_pad" / None); it is a no-op
+until ``set_activation_mesh`` installs a mesh (single-device tests never pay
+for it).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# activation hints
+# ---------------------------------------------------------------------------
+
+_ACT: dict = {"mesh": None, "batch_axes": (), "tp": True}
+
+
+def set_activation_mesh(mesh, tp: bool = True,
+                        batch_axes: tuple[str, ...] | None = None) -> None:
+    """Install (or clear, with ``mesh=None``) the activation mesh used by
+    ``act_hint``. ``batch_axes`` defaults to the data axes of the mesh."""
+    _ACT["mesh"] = mesh
+    _ACT["tp"] = tp
+    if mesh is None:
+        _ACT["batch_axes"] = ()
+    else:
+        _ACT["batch_axes"] = (tuple(batch_axes) if batch_axes is not None
+                              else data_axes(mesh))
+
+
+def _resolve_label(label, mesh) -> tuple[str, ...]:
+    if label is None:
+        return ()
+    if label == "batch":
+        return tuple(_ACT["batch_axes"])
+    if label in ("model", "model_pad"):
+        return ("model",) if (_ACT["tp"] and "model" in mesh.axis_names) else ()
+    if label in mesh.axis_names:
+        return (label,)
+    return ()
+
+
+def act_hint(x, *labels):
+    """Constrain an activation's sharding by logical axis labels.
+
+    Labels map per dim: "batch" -> the installed batch axes, "model"/"model_pad"
+    -> the model axis when TP is active, None -> unsharded. Axes that do not
+    evenly divide their dim are dropped (model_pad covers padded head dims).
+    No mesh installed -> returns ``x`` unchanged.
+    """
+    mesh = _ACT["mesh"]
+    if mesh is None:
+        return x
+    entries = []
+    nontrivial = False
+    for dim, label in zip(x.shape, labels):
+        axes = _resolve_label(label, mesh)
+        if axes and dim % _axis_product(mesh, axes) == 0:
+            entries.append(axes[0] if len(axes) == 1 else axes)
+            nontrivial = True
+        else:
+            entries.append(None)
+    if not nontrivial:
+        return x
+    spec = P(*entries)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# strategy selection
+# ---------------------------------------------------------------------------
+
+
+def _approx_param_count(cfg) -> float:
+    """Coarse parameter-count estimate from the config dims alone."""
+    d, L = cfg.d_model, cfg.n_layers
+    emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    attn = 0.0
+    if cfg.n_heads:
+        hd = cfg.head_dim or d // cfg.n_heads
+        attn = d * hd * (2 * cfg.n_heads + 2 * cfg.n_kv_heads)
+    ff = 3.0 * d * cfg.d_ff * max(cfg.n_experts, 1)
+    ssm = 3.0 * d * cfg.d_inner if cfg.d_inner else 0.0
+    return emb + L * (attn + ff + ssm)
+
+
+def pick_strategy(cfg, kind: str) -> str:
+    """-> "fsdp" | "tp" | "replicated" for one (arch, step-kind) cell."""
+    if kind != "train":  # prefill / decode / serve: small batch, TP it
+        return "tp"
+    if cfg.family == "moe":
+        # expert-parallel folds into TP here: the stacked expert FF dims are
+        # the only axes large enough to keep 16-way model sharding busy
+        return "tp"
+    if _approx_param_count(cfg) < 3e9:
+        return "replicated"
+    return "fsdp"
+
+
+# ---------------------------------------------------------------------------
+# spec construction
+# ---------------------------------------------------------------------------
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The client/batch mesh axes, outermost first (pod before data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_product(mesh, axes: tuple[str, ...]) -> int:
+    return int(math.prod(mesh.shape[a] for a in axes))
+
+
+def _shard_largest_dim(shape, axes: tuple[str, ...], mesh) -> P:
+    """Spec sharding the largest evenly-divisible dim over ``axes``
+    (ties -> the trailing dim, matching row-major layout locality)."""
+    if not axes:
+        return P()
+    size = _axis_product(mesh, axes)
+    best = -1
+    for i, d in enumerate(shape):
+        if d % size == 0 and d >= size and (best < 0 or d >= shape[best]):
+            best = i
+    if best < 0:
+        return P()
+    entries = [None] * len(shape)
+    entries[best] = axes[0] if len(axes) == 1 else axes
+    return P(*entries)
+
+
+def param_specs(cfg, params: Any, mesh, train: bool = False,
+                strategy: str | None = None) -> Any:
+    """PartitionSpec tree mirroring ``params`` (ShapeDtypeStructs or arrays).
+
+    Every sharded dim divides its axis product — valid jit input specs for
+    all archs on the production meshes by construction.
+    """
+    strategy = strategy or pick_strategy(cfg, "train" if train else "serve")
+    if strategy == "replicated":
+        return jax.tree.map(lambda x: P(), params)
+    axes = data_axes(mesh) if strategy == "fsdp" else ("model",)
+    if not set(axes) <= set(mesh.axis_names):
+        return jax.tree.map(lambda x: P(), params)
+    return jax.tree.map(lambda x: _shard_largest_dim(x.shape, axes, mesh),
+                        params)
+
+
+def opt_state_specs(pspec_tr: Any, opt: Any, mesh) -> Any:
+    """Adam/SGD state specs: moment trees follow their params (ZeRO-1 via
+    fsdp param specs), step counters replicate."""
+    return {k: (pspec_tr if k in ("m", "v", "mom")
+                else jax.tree.map(lambda x: P(), v))
+            for k, v in opt.items()}
+
+
+def batch_specs(batch: Any, mesh, cfg, strategy: str | None = None) -> Any:
+    """Shard the leading (global-batch) dim over the data axes; fsdp and
+    replicated training additionally fold the model axis into the batch so
+    every chip carries examples (dryrun.py's hybrid note)."""
+    axes = data_axes(mesh)
+    if strategy in ("fsdp", "replicated") and "model" in mesh.axis_names:
+        axes = axes + ("model",)
+
+    def spec(x):
+        for cand in (axes, data_axes(mesh)):
+            if (cand and len(x.shape) >= 1
+                    and x.shape[0] % _axis_product(mesh, cand) == 0
+                    and x.shape[0] >= _axis_product(mesh, cand)):
+                entry = cand[0] if len(cand) == 1 else cand
+                return P(*([entry] + [None] * (len(x.shape) - 1)))
+        return P()
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(cfg, caches: Any, mesh) -> Any:
+    """KV/SSM decode caches: shard the batch dim over the data axes."""
+    return batch_specs(caches, mesh, cfg)
+
+
+def to_named(mesh, tree: Any) -> Any:
+    """Bind a PartitionSpec tree to a real mesh -> NamedSharding tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

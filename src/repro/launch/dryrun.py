@@ -182,6 +182,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t1 = time.time()
         compiled = _compile_step(pcfg, mod, shape, mesh, train_mode)
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # jaxlib<0.4.38 returns per-device
+            ca = ca[0] if ca else {}
         hlo = compiled.as_text()
         coll = RL.parse_collectives(hlo)
         probe_stats.append({

@@ -38,6 +38,23 @@ class RoundCost:
                 "upload_mb": self.upload_mb}
 
 
+def per_client_times(fleet: FleetConfig, trained_flops: np.ndarray,
+                     fixed_flops: np.ndarray, upload_bytes: np.ndarray,
+                     utilization: float = 0.3
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """[N] (t_compute, t_comm) for one local-training + upload cycle.
+
+    Shared by the synchronous round simulator below and the event-driven
+    runtime (sim/events.py), so sync and async results are comparable under
+    the identical device model."""
+    eff = fleet.tops * 1e12 * utilization
+    t_comp = (np.asarray(trained_flops, np.float64)
+              + np.asarray(fixed_flops, np.float64)) / eff
+    t_comm = (np.asarray(upload_bytes, np.float64) * 8.0
+              / (fleet.bandwidth_mbps * 1e6))
+    return t_comp, t_comm
+
+
 def simulate_round(fleet: FleetConfig, selected: np.ndarray,
                    trained_flops: np.ndarray, fixed_flops: np.ndarray,
                    upload_bytes: np.ndarray, t_overhead: float = 0.05,
@@ -46,9 +63,10 @@ def simulate_round(fleet: FleetConfig, selected: np.ndarray,
     per-round FLOPs for (masked backward+update) and (always-paid forward);
     upload_bytes: [N] Eq. 8 on-demand volume."""
     sel = np.asarray(selected, bool)
-    eff = fleet.tops * 1e12 * utilization
-    t_comp = np.where(sel, (trained_flops + fixed_flops) / eff, 0.0)
-    t_comm = np.where(sel, upload_bytes * 8.0 / (fleet.bandwidth_mbps * 1e6), 0.0)
+    t_comp, t_comm = per_client_times(fleet, trained_flops, fixed_flops,
+                                      upload_bytes, utilization)
+    t_comp = np.where(sel, t_comp, 0.0)
+    t_comm = np.where(sel, t_comm, 0.0)
     busy = t_comp + t_comm
     round_time = float(busy.max()) + t_overhead if sel.any() else t_overhead
     t_idle = np.where(sel, round_time - busy, 0.0)

@@ -1,0 +1,246 @@
+"""Event-driven async runtime tests: sync parity, straggler decoupling,
+cohort freezing, and the streaming cohort-agg reduction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as AG
+from repro.core import divergence as DV
+from repro.core import mdlora
+from repro.core.async_engine import AsyncFedConfig, AsyncFedRun
+from repro.core.engine import FedConfig, FedRun
+from repro.core.strategies import (async_accessible, async_fedbuff,
+                                   async_relief, get_strategy)
+from repro.core.tasks import MMTask
+from repro.data import make_har_dataset, mm_config_for
+from repro.sim import make_fleet
+from repro.sim.events import EventQueue
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_har_dataset("pamap2", windows_per_subject=60, seed=0)
+    cfg = mm_config_for("pamap2", backbone="cnn", d_feat=8, d_fused=32,
+                        cnn_ch=(8, 16))
+    task, tr0 = MMTask.create(cfg, KEY)
+    return ds, task, tr0
+
+
+# ---------------------------------------------------------------------------
+# event queue
+# ---------------------------------------------------------------------------
+
+
+def test_event_queue_deterministic_fifo_ties():
+    q = EventQueue()
+    q.push(2.0, client=0)
+    q.push(1.0, client=1)
+    q.push(1.0, client=2)
+    q.push(1.5, client=3)
+    batch = q.pop_simultaneous()
+    assert [e.client for e in batch] == [1, 2]  # FIFO within the tie
+    assert [e.client for e in q.drain()] == [3, 0]
+
+
+# ---------------------------------------------------------------------------
+# sync parity: the anchor for everything else
+# ---------------------------------------------------------------------------
+
+
+def test_parity_with_sync_engine(setup):
+    """Homogeneous fleet + buffer K=N + zero staleness discount must
+    reproduce the synchronous engine's global trainable bit-for-bit after
+    one logical round (same rng)."""
+    ds, task, tr0 = setup
+    fleet = make_fleet(4, 0, 0, M=4)  # identical devices, full modalities
+    kw = dict(rounds=1, local_epochs=1, steps_per_epoch=2, batch_size=8,
+              eval_every=10, seed=0)
+    sync = FedRun.create(task, tr0, get_strategy("relief"), fleet,
+                         FedConfig(**kw))
+    sync.round(ds)
+
+    arun = AsyncFedRun.create(
+        task, tr0, async_relief(buffer_size=fleet.N, staleness_exponent=0.0),
+        fleet, AsyncFedConfig(**kw))
+    arun.run(ds, total_updates=fleet.N)
+
+    assert arun.state.round == 1  # exactly one flush
+    for a, b in zip(jax.tree.leaves(sync.state.trainable),
+                    jax.tree.leaves(arun.state.trainable)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_parity_streaming_pallas_interpret(setup):
+    """Same parity flush through the Pallas (interpret) cohort-agg path —
+    kernel and XLA oracle agree to float tolerance on the fused leaf."""
+    ds, task, tr0 = setup
+    fleet = make_fleet(4, 0, 0, M=4)
+    kw = dict(rounds=1, local_epochs=1, steps_per_epoch=2, batch_size=8,
+              eval_every=10, seed=0)
+    runs = {}
+    for impl in ("xla", "pallas"):
+        r = AsyncFedRun.create(
+            task, tr0,
+            async_relief(buffer_size=fleet.N, staleness_exponent=0.0),
+            fleet, AsyncFedConfig(agg_impl=impl, agg_interpret=True, **kw))
+        r.run(ds, total_updates=fleet.N)
+        runs[impl] = r.state.trainable
+    for a, b in zip(jax.tree.leaves(runs["xla"]),
+                    jax.tree.leaves(runs["pallas"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# straggler decoupling at 100x heterogeneity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow  # ~40s: two full federated runs on 1 CPU core
+def test_async_beats_sync_wallclock_at_100x(setup):
+    """At 100x compute heterogeneity the async runtime reaches the sync
+    FedAvg run's target loss in less simulated wall-clock, and absorbs the
+    same total client work in strictly less time (no straggler barrier)."""
+    ds, task, tr0 = setup
+    fleet = make_fleet(3, 3, 2, M=4, hetero_scale=100.0)
+    R = 8
+    kw = dict(rounds=R, local_epochs=2, steps_per_epoch=3, batch_size=32,
+              eval_every=100, seed=0, utilization=1e-4, t_overhead=1e-3)
+    sync = FedRun.create(task, tr0, get_strategy("fedavg"), fleet,
+                         FedConfig(**kw))
+    hs = sync.run(ds)
+    sync_times = np.cumsum(hs["round_time_s"])
+    sync_total = float(sync_times[-1])
+    target = float(np.mean(hs["loss"][-2:]))
+
+    arun = AsyncFedRun.create(
+        task, tr0, async_relief(buffer_size=2, staleness_exponent=0.5),
+        fleet, AsyncFedConfig(**kw))
+    ha = arun.run(ds)  # same total client updates: R * N
+
+    # same total work, strictly less simulated wall-clock
+    assert arun.state.sim_time < sync_total
+    # time-to-target-loss (running mean over 3 flushes vs sync final loss)
+    smoothed = np.convolve(ha["loss"], np.ones(3) / 3.0, mode="valid")
+    reached = np.where(smoothed <= target)[0]
+    assert reached.size > 0, (target, smoothed.min())
+    t_async = ha["sim_time_s"][int(reached[0]) + 2]
+    # sync hits its target only at its final round
+    assert t_async < sync_total
+    # fast devices actually cycle more often than stragglers
+    ups = arun.trace.per_client_updates
+    assert ups[np.argmax(fleet.tops)] > ups[np.argmin(fleet.tops)]
+
+
+# ---------------------------------------------------------------------------
+# cohort safety under partial buffers
+# ---------------------------------------------------------------------------
+
+
+def test_empty_cohort_buffers_freeze_blocks(setup):
+    """No buffered client owns modalities 2/3 -> their fusion blocks and
+    encoder groups stay exactly frozen across flushes; nothing goes NaN."""
+    ds, task, tr0 = setup
+    fleet = make_fleet(0, 2, 2, M=4)  # mid: {0,1}, low: {0} — 2,3 absent
+    fed = AsyncFedConfig(rounds=3, local_epochs=1, steps_per_epoch=2,
+                         batch_size=8, eval_every=100, seed=0)
+    arun = AsyncFedRun.create(task, tr0,
+                              async_accessible(buffer_size=2,
+                                               staleness_exponent=0.5),
+                              fleet, fed)
+    arun.run(ds)
+    assert arun.state.round >= 3
+    layout = task.layout
+    frozen_groups = {g for g in range(layout.G)
+                     if layout.modality[g] in (2, 3)}
+    leaves0 = jax.tree_util.tree_flatten_with_path(tr0)[0]
+    leaves1 = jax.tree_util.tree_flatten_with_path(arun.state.trainable)[0]
+    rg = layout.row_group_vector(
+        next(l for p, l in leaves0
+             if mdlora.path_str(p) == layout.fusion_a_path).shape[0])
+    for (p0, l0), (_, l1) in zip(leaves0, leaves1):
+        a0, a1 = np.asarray(l0, np.float32), np.asarray(l1, np.float32)
+        assert np.isfinite(a1).all(), mdlora.path_str(p0)
+        p = mdlora.path_str(p0)
+        if p == layout.fusion_a_path:
+            frozen_rows = np.isin(rg, list(frozen_groups))
+            np.testing.assert_array_equal(a0[frozen_rows], a1[frozen_rows])
+        elif layout.leaf_group.get(p) in frozen_groups:
+            np.testing.assert_array_equal(a0, a1)
+
+
+def test_staleness_discount_downweights_stale_clients(setup):
+    _, task, _ = setup
+    layout = task.layout
+    trained = jnp.ones((2, layout.G))
+    mmask = jnp.ones((2, layout.n_modalities))
+    disc = AG.staleness_discounts(np.array([0.0, 3.0]), 1.0)  # 1 and 1/4
+    W = AG.cohort_weights(layout, trained, mmask, client_scale=disc)
+    Wn = np.asarray(W)
+    nz = layout.sizes > 0
+    assert (Wn[0, nz] > Wn[1, nz]).all()
+    np.testing.assert_allclose(Wn[:, nz].sum(0), 1.0, rtol=1e-6)
+    # exponent 0 == no discounting
+    W0 = AG.cohort_weights(layout, trained, mmask,
+                           client_scale=AG.staleness_discounts(
+                               np.array([0.0, 3.0]), 0.0))
+    np.testing.assert_array_equal(np.asarray(W0)[:, nz], 0.5)
+
+
+# ---------------------------------------------------------------------------
+# streaming cohort-agg reduction
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_chunks_match_one_shot(setup):
+    """CohortAggBuffer over arbitrary chunkings == the one-shot
+    weighted_combine + group_divergence reduction."""
+    _, task, tr0 = setup
+    layout = task.layout
+    rng = np.random.default_rng(0)
+    N = 6
+    deltas = jax.tree.map(
+        lambda x: jnp.asarray(rng.normal(size=(N,) + x.shape), jnp.float32),
+        tr0)
+    trained = jnp.asarray(rng.random((N, layout.G)) > 0.4, jnp.float32)
+    mmask = jnp.asarray(rng.random((N, layout.n_modalities)) > 0.3,
+                        jnp.float32)
+    W = AG.cohort_weights(layout, trained, mmask)
+    C = trained
+
+    ref_agg = mdlora.weighted_combine(layout, deltas, W)
+    ref_d = DV.group_divergence(layout, deltas, C)
+
+    for chunks in ([slice(0, 6)], [slice(0, 2), slice(2, 5), slice(5, 6)]):
+        buf = AG.CohortAggBuffer(layout, tr0)
+        for sl in chunks:
+            buf.push(jax.tree.map(lambda x: x[sl], deltas), W[sl], C[sl])
+        agg, d, cnt = buf.finalize()
+        for a, b in zip(jax.tree.leaves(ref_agg), jax.tree.leaves(agg)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+        np.testing.assert_allclose(np.asarray(d), np.asarray(ref_d),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(cnt),
+                                      np.asarray(C.sum(0)))
+
+
+def test_async_fedbuff_runs_and_improves(setup):
+    """The modality-unaware async baseline runs end to end with finite
+    losses and a valid F1."""
+    ds, task, tr0 = setup
+    fleet = make_fleet(3, 3, 2, M=4)
+    fed = AsyncFedConfig(rounds=2, local_epochs=1, steps_per_epoch=2,
+                         batch_size=8, eval_every=100, seed=0)
+    arun = AsyncFedRun.create(task, tr0,
+                              async_fedbuff(buffer_size=3,
+                                            staleness_exponent=0.5),
+                              fleet, fed)
+    h = arun.run(ds)
+    assert np.isfinite(h["loss"]).all()
+    assert 0.0 <= h["f1"][-1] <= 1.0
+    assert arun.trace.completions == 2 * fleet.N
+    assert (np.diff(h["sim_time_s"]) >= 0).all()  # time moves forward

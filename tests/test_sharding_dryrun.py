@@ -103,6 +103,8 @@ with mesh:
     compiled = jax.jit(fn, in_shardings=(sh(pspec), sh(ospec), sh(bspec))
                        ).lower(params, opt, batch).compile()
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # jaxlib<0.4.38: one entry per device
+        ca = ca[0] if ca else {}
     coll = RL.parse_collectives(compiled.as_text())
 print(json.dumps({"flops": ca.get("flops", 0),
                   "colls": sum(coll.counts.values())}))
