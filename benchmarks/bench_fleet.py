@@ -1,0 +1,165 @@
+"""Fleet-scale throughput benchmark for the vectorized async runtime.
+
+Sweeps the structure-of-arrays simulator (core/async_engine.py
+VectorizedAsyncFedRun) over fleet sizes N = 10^2 .. 10^6 in pure
+system-simulation mode (grad_mode="none": timing / energy / staleness for
+the full fleet, no gradient work), plus decoupled-gradient cells at 10^4
+(grad_mode="cohort": local updates only for the K clients of each flush)
+and a churn cell exercising the population model. Each cell runs a fixed
+number of server flushes and reports wall-clock throughput:
+
+    events_per_s   absorbed client completions per wall second
+    flushes_per_s  server versions per wall second
+
+Outputs
+    benchmarks/results/bench_fleet.json   full sweep (schema-stable)
+    BENCH_fleet.json (repo root)          committed baseline, written by
+                                          --update-baseline; --smoke runs
+                                          the N=10^4 cell only and exits
+                                          nonzero if throughput regressed
+                                          more than 2x against it (the CI
+                                          perf gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, SCHEMA_VERSION, write_json
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                             "BENCH_fleet.json")
+FLUSHES = 200  # server versions per cell
+BUFFER_K = 64
+SMOKE_N = 10_000
+REGRESSION_FACTOR = 2.0
+
+
+def _build(seed: int = 0):
+    import jax
+
+    from repro.core.tasks import MMTask
+    from repro.data import mm_config_for
+
+    cfg = mm_config_for("pamap2", backbone="cnn", d_feat=16, d_fused=64,
+                        cnn_ch=(16, 32))
+    return MMTask.create(cfg, jax.random.PRNGKey(seed))
+
+
+def _cell(task, tr0, n: int, grad_mode: str, dataset=None,
+          churn_rate: float = 0.0, arrival_rate: float = 0.0,
+          flushes: int = FLUSHES, seed: int = 0) -> dict:
+    from repro.core.async_engine import AsyncFedConfig, VectorizedAsyncFedRun
+    from repro.core.strategies import async_relief
+    from repro.sim import make_fleet, scale_fleet
+
+    fleet = scale_fleet(make_fleet(3, 3, 2, M=4), n,
+                        np.random.default_rng(seed))
+    fed = AsyncFedConfig(rounds=1, local_epochs=1, steps_per_epoch=1,
+                         batch_size=4, eval_every=0, seed=seed,
+                         utilization=2e-5, t_overhead=0.05,
+                         jitter_sigma=0.1, grad_mode=grad_mode,
+                         churn_rate=churn_rate, arrival_rate=arrival_rate)
+    run = VectorizedAsyncFedRun.create(
+        task, tr0, async_relief(buffer_size=BUFFER_K), fleet, fed)
+    total = flushes * min(BUFFER_K, n)
+    t0 = time.perf_counter()
+    run.run(dataset, total_updates=total)
+    wall = time.perf_counter() - t0
+    completions = run.trace.completions
+    h = run.history
+    return {
+        "n": n, "grad_mode": grad_mode, "churn_rate": churn_rate,
+        "flushes": run.trace.flushes, "completions": completions,
+        "wall_s": round(wall, 4),
+        "events_per_s": round(completions / max(wall, 1e-9), 2),
+        "flushes_per_s": round(run.trace.flushes / max(wall, 1e-9), 2),
+        "sim_time_s": round(run.state.sim_time, 4),
+        "staleness_mean": round(float(np.mean(h["staleness_mean"])), 3),
+        "staleness_p95": round(
+            float(np.percentile(h["staleness_mean"], 95)), 3),
+        "energy_j": round(run.trace.energy_j, 2),
+        "alive_frac": round(float(run.fstate.alive.mean()), 4),
+    }
+
+
+def run_sweep(smoke: bool = False, max_n: int = 1_000_000,
+              seed: int = 0) -> list[dict]:
+    task, tr0 = _build(seed)
+    rows = []
+    if smoke:
+        rows.append(_cell(task, tr0, SMOKE_N, "none", seed=seed))
+        return rows
+    for n in (100, 10_000, 100_000, 1_000_000):
+        if n > max_n:
+            continue
+        rows.append(_cell(task, tr0, n, "none", seed=seed))
+        print(f"  N={n:>9,d} none    {rows[-1]['events_per_s']:>12,.0f} ev/s "
+              f"wall {rows[-1]['wall_s']:7.2f}s "
+              f"stale {rows[-1]['staleness_mean']:.2f}")
+    from repro.data import make_har_dataset
+    ds = make_har_dataset("pamap2", windows_per_subject=60, seed=seed)
+    rows.append(_cell(task, tr0, 10_000, "cohort", dataset=ds, flushes=20,
+                      seed=seed))
+    print(f"  N={10_000:>9,d} cohort  {rows[-1]['events_per_s']:>12,.0f} ev/s "
+          f"wall {rows[-1]['wall_s']:7.2f}s (gradients for "
+          f"{rows[-1]['completions']} of 10,000 clients)")
+    rows.append(_cell(task, tr0, 10_000, "none", churn_rate=0.02,
+                      arrival_rate=0.02, seed=seed))
+    print(f"  N={10_000:>9,d} churn   {rows[-1]['events_per_s']:>12,.0f} ev/s "
+          f"alive {rows[-1]['alive_frac']:.2%}")
+    return rows
+
+
+def check_regression(rows: list[dict]) -> int:
+    """CI gate: N=10^4 smoke throughput must stay within REGRESSION_FACTOR
+    of the committed baseline."""
+    if not os.path.exists(BASELINE_PATH):
+        print("no committed BENCH_fleet.json baseline; skipping gate")
+        return 0
+    with open(BASELINE_PATH) as f:
+        base = json.load(f)
+    base_row = next((r for r in base.get("rows", [])
+                     if r["n"] == SMOKE_N and r["grad_mode"] == "none"
+                     and r.get("churn_rate", 0.0) == 0.0), None)
+    cur_row = next((r for r in rows
+                    if r["n"] == SMOKE_N and r["grad_mode"] == "none"
+                    and r.get("churn_rate", 0.0) == 0.0), None)
+    if base_row is None or cur_row is None:
+        print("baseline or current N=1e4 row missing; skipping gate")
+        return 0
+    floor = base_row["events_per_s"] / REGRESSION_FACTOR
+    status = "OK" if cur_row["events_per_s"] >= floor else "REGRESSION"
+    print(f"perf gate: {cur_row['events_per_s']:,.0f} ev/s vs baseline "
+          f"{base_row['events_per_s']:,.0f} ev/s (floor {floor:,.0f}) "
+          f"-> {status}")
+    return 0 if status == "OK" else 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="N=1e4 cell only + regression gate (CI)")
+    ap.add_argument("--max-n", type=int, default=1_000_000,
+                    help="largest fleet size in the sweep")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write the committed BENCH_fleet.json baseline")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    rows = run_sweep(smoke=args.smoke, max_n=args.max_n, seed=args.seed)
+    payload = {"schema_version": SCHEMA_VERSION, "buffer_size": BUFFER_K,
+               "flushes_per_cell": FLUSHES, "rows": rows}
+    write_json(os.path.join(RESULTS_DIR, "bench_fleet.json"), payload)
+    if args.update_baseline:
+        write_json(os.path.abspath(BASELINE_PATH), payload)
+        print(f"baseline written: {os.path.abspath(BASELINE_PATH)}")
+    return check_regression(rows)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -108,12 +108,20 @@ class CohortAggBuffer:
         self.impl = impl
         self.interpret = interpret
         self.bd = bd
-        self._agg = jax.tree.map(
+        # zero prototypes are derived once; reset() re-points the
+        # accumulators at them (jnp arrays are immutable, sharing is safe),
+        # so a long-lived buffer serves many flushes without re-allocating
+        self._zero_tree = jax.tree.map(
             lambda x: jnp.zeros(x.shape, jnp.float32), proto)
-        self._csum = jax.tree.map(
-            lambda x: jnp.zeros(x.shape, jnp.float32), proto)
-        self._sq = jnp.zeros((layout.G,), jnp.float32)
-        self._cnt = jnp.zeros((layout.G,), jnp.float32)
+        self._zero_g = jnp.zeros((layout.G,), jnp.float32)
+        self.reset()
+
+    def reset(self) -> None:
+        """Clear accumulated state so the buffer can serve the next flush."""
+        self._agg = self._zero_tree
+        self._csum = self._zero_tree
+        self._sq = self._zero_g
+        self._cnt = self._zero_g
 
     def push(self, deltas: Any, W: Array, C: Array) -> None:
         """deltas: client-stacked pytree ([K, ...] leaves); W/C: [K, G]

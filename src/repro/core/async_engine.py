@@ -22,6 +22,38 @@ cohort aggregation*:
 Simulated time and energy come from the same device model as the sync
 engine (sim/timing.py), so bench_async.py's wall-clock/energy comparisons
 are apples-to-apples.
+
+Two runtimes share one server flush (``_ServerFlushMixin._flush_arrays``):
+
+``AsyncFedRun``           the reference event loop — a heap of per-client
+                          ``_Pending`` objects, gradients computed eagerly
+                          at dispatch. Exact, but O(N) Python state: fine
+                          for N~100, hopeless at fleet scale.
+``VectorizedAsyncFedRun`` the structure-of-arrays fleet simulator
+                          (sim/fleet.py): all per-client state in flat
+                          NumPy arrays, the heap replaced by vectorized
+                          next-K extraction with the same FIFO tie-break,
+                          and gradient work decoupled from system
+                          simulation via ``grad_mode``:
+
+    "dispatch"  gradients at dispatch time for every dispatched client —
+                event-for-event equivalent to AsyncFedRun (the history-
+                equivalence anchor in tests/test_fleet.py); small fleets.
+    "cohort"    system time/energy/staleness simulated for the FULL fleet
+                of N clients, but ``local_update`` runs only for the
+                M = buffer_size clients actually flushed (M << N), each
+                against the retained snapshot of the model version it
+                pulled (a bounded ring of ``snapshot_ring`` versions).
+                Batch draws are counter-based (seeded by (seed, client,
+                completion ticket)), so results are deterministic and
+                independent of event interleaving.
+    "none"      pure system simulation — no gradients, loss is NaN; this
+                is what lets benchmarks/bench_fleet.py sweep N up to 10^6
+                and record staleness/energy distributions at fleet scale.
+
+A ``PopulationModel`` (churn_rate / arrival_rate on AsyncFedConfig) adds
+arrivals and churn: departing clients lose in-flight work and stop accruing
+energy; arrivals rejoin idle and are redispatched on the next event.
 """
 from __future__ import annotations
 
@@ -34,15 +66,20 @@ import numpy as np
 
 from repro.core import aggregation as AG
 from repro.core import mdlora
-from repro.core.engine import (FedConfig, _PROTO_CACHE, _rank_gates,
-                               allocate, draw_client_batches,
-                               make_local_update)
+from repro.core.engine import (AllocPlan, FedConfig, _rank_gates, allocate,
+                               allocate_rows, draw_client_batches,
+                               make_local_update, plan_allocation)
 from repro.core.strategies import AsyncStrategy
 from repro.core.tasks import MMTask
 from repro.sim import FleetConfig
+from repro.sim import timing as T
 from repro.sim.events import AsyncTrace, EventQueue, completion_times
+from repro.sim.fleet import (FleetState, PopulationModel, pack_group_bits,
+                             unpack_group_bits)
 
 Array = jax.Array
+
+GRAD_MODES = ("dispatch", "cohort", "none")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +91,11 @@ class AsyncFedConfig(FedConfig):
     total_updates: int | None = None  # overrides rounds * N when set
     agg_impl: str = "xla"  # cohort-agg reduction: "xla" | "pallas"
     agg_interpret: bool = True  # Pallas interpret mode (CPU containers)
+    # --- vectorized fleet runtime (VectorizedAsyncFedRun) ---
+    grad_mode: str = "dispatch"  # dispatch | cohort | none (see module doc)
+    snapshot_ring: int = 8  # retained model versions for cohort gradients
+    churn_rate: float = 0.0  # departures per alive client per sim-second
+    arrival_rate: float = 0.0  # re-arrivals per departed client per sim-sec
 
 
 @dataclasses.dataclass
@@ -64,6 +106,27 @@ class AsyncFedState:
     mag_ema: np.ndarray  # [G]
     rng: np.random.Generator
     sim_time: float = 0.0
+
+
+def _make_state(G: int, trainable0: Any, seed: int) -> AsyncFedState:
+    return AsyncFedState(round=0, trainable=trainable0,
+                         dbar=np.ones(G) * 1e-6, mag_ema=np.ones(G),
+                         rng=np.random.default_rng(seed))
+
+
+def _check_strategy(strategy: AsyncStrategy) -> None:
+    if strategy.personal or strategy.share_only:
+        raise ValueError("async runtime keeps one global model; "
+                         "personalized strategies are sync-only")
+    if strategy.agg not in ("cohort", "fedavg"):
+        raise ValueError(f"async runtime supports cohort/fedavg "
+                         f"aggregation, not {strategy.agg!r}")
+
+
+def _history_init() -> dict:
+    return {"flush": [], "loss": [], "sim_time_s": [], "energy_j": [],
+            "upload_mb": [], "staleness_mean": [], "f1": [],
+            "f1_flush": [], "divergence": [], "selected_frac": []}
 
 
 @dataclasses.dataclass
@@ -81,8 +144,114 @@ class _Pending:
     upload_bytes: float
 
 
+class _ServerFlushMixin:
+    """The server-side flush, shared by both async runtimes.
+
+    Expects ``task/strategy/fleet/fed/state/trace/history/aggbuf``
+    attributes on self. ``aggbuf`` is the run-lifetime CohortAggBuffer —
+    hoisted out of the per-flush path and reset between flushes, so the
+    zero prototypes are derived exactly once per run.
+    """
+
+    def _flush_arrays(self, deltas: Any, S: np.ndarray,
+                      client_ids: np.ndarray, losses: np.ndarray | None,
+                      staleness: np.ndarray) -> dict:
+        """Fold one buffered cohort into the global model (one server
+        version). ``deltas``: client-stacked pytree ([K, ...] leaves), rows
+        aligned with ``S``/``client_ids``/``losses``/``staleness`` — all
+        sorted by client id so a full homogeneous buffer reproduces the
+        synchronous stack exactly. ``deltas=None`` = system-only flush
+        (grad_mode "none"): staleness/energy accounting advances, the model
+        and divergence state stay untouched, loss records as NaN."""
+        task, fleet, fed = self.task, self.fleet, self.fed
+        layout, state = task.layout, self.state
+        K = len(client_ids)
+        staleness = np.asarray(staleness, np.float64)
+        fresh = np.ones(K, bool)
+        if self.strategy.max_staleness is not None:
+            fresh = staleness <= self.strategy.max_staleness
+            S = S * fresh[:, None]
+
+        if deltas is not None:
+            trained = jnp.asarray(S, jnp.float32)
+            mmask = jnp.asarray(fleet.modality_mask[client_ids], jnp.float32)
+            a = self.strategy.staleness_exponent
+            scale = (None if a == 0.0
+                     else AG.staleness_discounts(staleness, a))
+            if self.strategy.agg == "cohort":
+                W = AG.cohort_weights(layout, trained, mmask,
+                                      client_scale=scale)
+            else:  # fedavg: every (fresh) buffered client into every
+                # non-empty group — max_staleness drops apply here too
+                ones = jnp.asarray(
+                    np.tile(layout.sizes[None, :] > 0, (K, 1))
+                    & fresh[:, None], jnp.float32)
+                W = AG.cohort_weights(layout, ones, jnp.ones_like(mmask),
+                                      client_scale=scale)
+
+            # divergence cohort: possession AND trained (paper Eq. 5 on the
+            # buffered subset)
+            acc = layout.accessible(fleet.modality_mask[client_ids])
+            C = jnp.asarray(acc & (S > 0), jnp.float32)
+
+            self.aggbuf.reset()
+            self.aggbuf.push(deltas, W, C)
+            agg_tree, d, cnt = self.aggbuf.finalize()
+
+            state.trainable = jax.tree.map(
+                lambda t, g: (t.astype(jnp.float32)
+                              + fed.server_lr * g).astype(t.dtype),
+                state.trainable, agg_tree)
+
+            d_np = np.asarray(d)
+            touched = np.asarray(cnt) > 0
+            state.dbar[touched] = (fed.gamma * d_np
+                                   + (1.0 - fed.gamma) * state.dbar)[touched]
+            per_client_norms = np.asarray(jax.vmap(
+                lambda t: mdlora.group_norms(layout, t))(deltas))
+            denom = np.maximum(S.sum(0), 1)
+            mag = (per_client_norms * S).sum(0) / denom
+            sel = S.any(0)
+            state.mag_ema[sel] = (0.5 * state.mag_ema + 0.5 * mag)[sel]
+            loss = float(np.mean(losses))
+        else:  # system-only simulation: no gradient work this flush
+            d_np = np.zeros(layout.G)
+            loss = float("nan")
+
+        state.round += 1
+        self.trace.flushes += 1
+        rec = {"flush": state.round, "sim_time_s": state.sim_time,
+               "loss": loss, "staleness_mean": float(staleness.mean()),
+               "energy_j": self.trace.energy_j,
+               "upload_mb": self.trace.upload_mb,
+               "selected_frac": float(S.mean()), "divergence": d_np}
+        for key in ("flush", "loss", "sim_time_s", "energy_j", "upload_mb",
+                    "staleness_mean", "selected_frac", "divergence"):
+            self.history[key].append(rec[key])
+        return rec
+
+    def _log_and_eval(self, rec: dict, dataset, log_every: int,
+                      tag: str) -> None:
+        if log_every and rec["flush"] % log_every == 0:
+            print(f"[{tag}] flush "
+                  f"{rec['flush']:5d} t={rec['sim_time_s']:9.3f}s"
+                  f" loss {rec['loss']:.4f} "
+                  f"stale {rec['staleness_mean']:.1f}")
+        if (self.fed.eval_every and dataset is not None
+                and rec["flush"] % self.fed.eval_every == 0):
+            self.history["f1"].append(self.evaluate(dataset))
+            self.history["f1_flush"].append(rec["flush"])
+
+    # -- evaluation -----------------------------------------------------------
+
+    def evaluate(self, dataset) -> float:
+        xs = np.concatenate(dataset.test_x)
+        ys = np.concatenate(dataset.test_y)
+        return self.task.eval_f1(self.state.trainable, xs, ys)
+
+
 @dataclasses.dataclass
-class AsyncFedRun:
+class AsyncFedRun(_ServerFlushMixin):
     task: MMTask
     strategy: AsyncStrategy
     fleet: FleetConfig
@@ -94,30 +263,23 @@ class AsyncFedRun:
     buffer: list
     trace: AsyncTrace
     history: dict
+    aggbuf: AG.CohortAggBuffer
+    proto: Any  # trainable prototype (explicit, not an id()-keyed cache)
 
     @classmethod
     def create(cls, task: MMTask, trainable0: Any, strategy: AsyncStrategy,
                fleet: FleetConfig, fed: AsyncFedConfig) -> "AsyncFedRun":
-        if strategy.personal or strategy.share_only:
-            raise ValueError("async runtime keeps one global model; "
-                             "personalized strategies are sync-only")
-        if strategy.agg not in ("cohort", "fedavg"):
-            raise ValueError(f"async runtime supports cohort/fedavg "
-                             f"aggregation, not {strategy.agg!r}")
-        _PROTO_CACHE[id(task)] = trainable0
-        G = task.layout.G
-        state = AsyncFedState(
-            round=0, trainable=trainable0, dbar=np.ones(G) * 1e-6,
-            mag_ema=np.ones(G), rng=np.random.default_rng(fed.seed))
+        _check_strategy(strategy)
+        state = _make_state(task.layout.G, trainable0, fed.seed)
         trace = AsyncTrace()
         trace.init_fleet(fleet.N)
-        history = {"flush": [], "loss": [], "sim_time_s": [], "energy_j": [],
-                   "upload_mb": [], "staleness_mean": [], "f1": [],
-                   "f1_flush": [], "divergence": [], "selected_frac": []}
+        aggbuf = AG.CohortAggBuffer(task.layout, trainable0,
+                                    impl=fed.agg_impl,
+                                    interpret=fed.agg_interpret)
         return cls(task, strategy, fleet, fed, state,
                    make_local_update(task, fed, strategy.prox_mu),
-                   _rank_gates(task, strategy, fleet), EventQueue(), [],
-                   trace, history)
+                   _rank_gates(trainable0, strategy, fleet), EventQueue(),
+                   [], trace, _history_init(), aggbuf, trainable0)
 
     # -- client dispatch ------------------------------------------------------
 
@@ -171,80 +333,18 @@ class AsyncFedRun:
     # -- server flush ---------------------------------------------------------
 
     def _flush(self) -> dict:
-        """Fold the buffered cohort into the global model (one server
-        version). Buffered entries are stacked in client-id order so a full
-        homogeneous buffer reproduces the synchronous stack exactly."""
-        task, fleet, fed = self.task, self.fleet, self.fed
-        layout, state = task.layout, self.state
+        """Stack the buffered cohort (client-id order) and fold it into the
+        global model through the shared ``_flush_arrays``."""
         entries = sorted(self.buffer, key=lambda e: e.client)
         self.buffer = []
-        K = len(entries)
-
         deltas = jax.tree.map(lambda *xs: jnp.stack(xs),
                               *[e.delta for e in entries])
         S = np.stack([e.S_row for e in entries])  # [K, G]
         client_ids = np.array([e.client for e in entries])
-        staleness = np.array([state.round - e.version for e in entries],
+        staleness = np.array([self.state.round - e.version for e in entries],
                              np.float64)
-        fresh = np.ones(K, bool)
-        if self.strategy.max_staleness is not None:
-            fresh = staleness <= self.strategy.max_staleness
-            S = S * fresh[:, None]
-        trained = jnp.asarray(S, jnp.float32)
-        mmask = jnp.asarray(fleet.modality_mask[client_ids], jnp.float32)
-
-        a = self.strategy.staleness_exponent
-        scale = (None if a == 0.0
-                 else AG.staleness_discounts(staleness, a))
-        if self.strategy.agg == "cohort":
-            W = AG.cohort_weights(layout, trained, mmask, client_scale=scale)
-        else:  # fedavg: every (fresh) buffered client into every non-empty
-            # group — max_staleness drops apply here too
-            ones = jnp.asarray(
-                np.tile(layout.sizes[None, :] > 0, (K, 1))
-                & fresh[:, None], jnp.float32)
-            W = AG.cohort_weights(layout, ones, jnp.ones_like(mmask),
-                                  client_scale=scale)
-
-        # divergence cohort: possession AND trained (paper Eq. 5 on the
-        # buffered subset)
-        acc = layout.accessible(fleet.modality_mask[client_ids])
-        C = jnp.asarray(acc & (S > 0), jnp.float32)
-
-        agg = AG.CohortAggBuffer(layout, state.trainable,
-                                 impl=fed.agg_impl,
-                                 interpret=fed.agg_interpret)
-        agg.push(deltas, W, C)
-        agg_tree, d, cnt = agg.finalize()
-
-        state.trainable = jax.tree.map(
-            lambda t, g: (t.astype(jnp.float32)
-                          + fed.server_lr * g).astype(t.dtype),
-            state.trainable, agg_tree)
-
-        d_np = np.asarray(d)
-        touched = np.asarray(cnt) > 0
-        state.dbar[touched] = (fed.gamma * d_np
-                               + (1.0 - fed.gamma) * state.dbar)[touched]
-        per_client_norms = np.asarray(jax.vmap(
-            lambda t: mdlora.group_norms(layout, t))(deltas))
-        denom = np.maximum(S.sum(0), 1)
-        mag = (per_client_norms * S).sum(0) / denom
-        sel = S.any(0)
-        state.mag_ema[sel] = (0.5 * state.mag_ema + 0.5 * mag)[sel]
-
-        state.round += 1
-        self.trace.flushes += 1
-        rec = {"flush": state.round, "sim_time_s": state.sim_time,
-               "loss": float(np.mean([e.loss for e in entries])),
-               "staleness_mean": float(staleness.mean()),
-               "energy_j": self.trace.energy_j,
-               "upload_mb": self.trace.upload_mb,
-               "selected_frac": float(S.mean()), "divergence": d_np}
-        for key in ("flush", "loss", "sim_time_s", "energy_j", "upload_mb",
-                    "staleness_mean", "selected_frac", "divergence"):
-            self.history[key].append(rec[key])
-        return rec
+        losses = np.array([e.loss for e in entries])
+        return self._flush_arrays(deltas, S, client_ids, losses, staleness)
 
     # -- the event loop -------------------------------------------------------
 
@@ -273,15 +373,8 @@ class AsyncFedRun:
                 completed.append(ev.client)
                 if len(self.buffer) >= K:
                     rec = self._flush()
-                    if (log_every and rec["flush"] % log_every == 0):
-                        print(f"[{self.strategy.name}] flush "
-                              f"{rec['flush']:5d} t={rec['sim_time_s']:9.3f}s"
-                              f" loss {rec['loss']:.4f} "
-                              f"stale {rec['staleness_mean']:.1f}")
-                    if (self.fed.eval_every
-                            and rec["flush"] % self.fed.eval_every == 0):
-                        self.history["f1"].append(self.evaluate(dataset))
-                        self.history["f1_flush"].append(rec["flush"])
+                    self._log_and_eval(rec, dataset, log_every,
+                                       self.strategy.name)
                 if processed >= total:
                     break
             if processed < total:
@@ -292,9 +385,310 @@ class AsyncFedRun:
             self.history["f1_flush"].append(self.state.round)
         return self.history
 
-    # -- evaluation -----------------------------------------------------------
 
-    def evaluate(self, dataset) -> float:
-        xs = np.concatenate(dataset.test_x)
-        ys = np.concatenate(dataset.test_y)
-        return self.task.eval_f1(self.state.trainable, xs, ys)
+# ---------------------------------------------------------------------------
+# the vectorized fleet runtime
+# ---------------------------------------------------------------------------
+
+
+class VectorizedAsyncFedRun(_ServerFlushMixin):
+    """Structure-of-arrays async runtime for fleet-scale N (sim/fleet.py).
+
+    Same protocol as ``AsyncFedRun`` — FedBuff buffer-K flushes with
+    staleness-discounted cohort aggregation — but all per-client system
+    state lives in flat arrays, events come from vectorized next-K
+    extraction instead of a heap, and gradient computation is decoupled
+    from system simulation via ``fed.grad_mode`` (see module docstring).
+    With ``grad_mode="dispatch"`` the flush history (loss, staleness,
+    selected_frac, sim_time) is event-for-event identical to AsyncFedRun.
+    """
+
+    def __init__(self, task: MMTask, strategy: AsyncStrategy,
+                 fleet: FleetConfig, fed: AsyncFedConfig,
+                 state: AsyncFedState, local_update: Any, plan: AllocPlan,
+                 fstate: FleetState, population: PopulationModel | None,
+                 trace: AsyncTrace, history: dict,
+                 aggbuf: AG.CohortAggBuffer, proto: Any):
+        self.task = task
+        self.strategy = strategy
+        self.fleet = fleet
+        self.fed = fed
+        self.state = state
+        self.local_update = local_update
+        self.plan = plan
+        self.fstate = fstate
+        self.population = population
+        self.trace = trace
+        self.history = history
+        self.aggbuf = aggbuf
+        self.proto = proto
+        self.grad_mode = fed.grad_mode
+        self.ring_clamped = 0  # cohort-mode pulls older than the ring
+        # buffered (completed, not yet flushed) client state — columnar
+        self._buf_client: list[np.ndarray] = []
+        self._buf_version: list[np.ndarray] = []
+        self._buf_bits: list[np.ndarray] = []
+        self._buf_ticket: list[np.ndarray] = []
+        self._buf_loss: list[np.ndarray] = []
+        self._buf_deltas: list[Any] = []
+        self._buf_count = 0
+        # dispatch-mode in-flight gradient store ([N, ...] stacked leaves)
+        self._pend_deltas: Any = None
+        self._pend_loss: np.ndarray | None = None
+        # cohort-mode ring of the last `snapshot_ring` model versions
+        self._ring: Any = None
+        if fed.grad_mode == "cohort":
+            R = max(1, fed.snapshot_ring)
+            self._ring = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (R,) + x.shape), proto)
+        self._rank_rows_cache: dict[int, Any] = {}
+        self._churn_rng = np.random.default_rng([fed.seed, 0x5EED])
+
+    @classmethod
+    def create(cls, task: MMTask, trainable0: Any, strategy: AsyncStrategy,
+               fleet: FleetConfig, fed: AsyncFedConfig
+               ) -> "VectorizedAsyncFedRun":
+        _check_strategy(strategy)
+        if fed.grad_mode not in GRAD_MODES:
+            raise ValueError(f"grad_mode must be one of {GRAD_MODES}, "
+                             f"got {fed.grad_mode!r}")
+        if strategy.rank_caps:
+            raise ValueError("rank_caps build an [N, ...]-stacked gate tree "
+                             "— unsupported at fleet scale")
+        if strategy.alloc == "random":
+            raise ValueError("alloc='random' draws fleet-shaped noise per "
+                             "dispatch; use the event-loop AsyncFedRun")
+        state = _make_state(task.layout.G, trainable0, fed.seed)
+        trace = AsyncTrace()
+        trace.init_fleet(fleet.N)
+        plan = plan_allocation(strategy, task, fleet, fed, task.layout.flops)
+        pop = (PopulationModel(fed.churn_rate, fed.arrival_rate)
+               if (fed.churn_rate > 0.0 or fed.arrival_rate > 0.0) else None)
+        lu = (make_local_update(task, fed, strategy.prox_mu)
+              if fed.grad_mode != "none" else None)
+        aggbuf = AG.CohortAggBuffer(task.layout, trainable0,
+                                    impl=fed.agg_impl,
+                                    interpret=fed.agg_interpret)
+        return cls(task, strategy, fleet, fed, state, lu, plan,
+                   FleetState.create(fleet.N), pop, trace, _history_init(),
+                   aggbuf, trainable0)
+
+    # -- client dispatch ------------------------------------------------------
+
+    def _rank_gate_rows(self, b: int) -> Any:
+        """All-ones per-client gate rows (rank_caps are rejected above)."""
+        if b not in self._rank_rows_cache:
+            self._rank_rows_cache[b] = jax.tree.map(
+                lambda x: jnp.ones((b,) + x.shape, x.dtype), self.proto)
+        return self._rank_rows_cache[b]
+
+    def _dispatch_vec(self, idx: np.ndarray, now: float, dataset) -> None:
+        """Pull the current model to clients ``idx`` and schedule their
+        completions — array-resident, O(batch) given the cached AllocPlan."""
+        task, fed, fleet = self.task, self.fed, self.fleet
+        layout, state = task.layout, self.state
+        idx = np.asarray(idx, np.int64)
+        B = len(idx)
+        if B == 0:
+            return
+        S = allocate_rows(self.plan, self.strategy, state, idx)  # [B, G]
+
+        steps = fed.local_epochs * fed.steps_per_epoch
+        if self.grad_mode == "dispatch":
+            batches = draw_client_batches(state.rng, dataset, idx, steps,
+                                          fed.batch_size)
+            start = jax.tree.map(
+                lambda g: jnp.broadcast_to(g, (B,) + g.shape),
+                state.trainable)
+            gates = jnp.asarray(S, jnp.float32)
+            mmasks = jnp.asarray(fleet.modality_mask[idx], jnp.float32)
+            deltas, losses = self.local_update(
+                start, batches, mmasks, gates, self._rank_gate_rows(B),
+                fed.lr)
+            if self._pend_deltas is None:
+                self._pend_deltas = jax.tree.map(
+                    lambda x: jnp.zeros((fleet.N,) + x.shape, jnp.float32),
+                    self.proto)
+                self._pend_loss = np.full(fleet.N, np.nan)
+            jidx = jnp.asarray(idx)
+            self._pend_deltas = jax.tree.map(
+                lambda buf, d: buf.at[jidx].set(d), self._pend_deltas,
+                deltas)
+            self._pend_loss[idx] = np.asarray(losses)
+
+        examples = steps * fed.batch_size
+        if fed.sim_mode == "flop_proportional":
+            k_count = np.asarray(S, np.float64).sum(1)
+            trained_fl = k_count * float(np.mean(layout.flops)) * examples * 3.0
+            fixed_fl = np.zeros(B)
+        else:  # fwd_aware
+            trained_fl = (np.asarray(S, np.float64) @ layout.flops
+                          ) * examples * 2.0
+            fixed_fl = np.full(B, task.forward_flops_per_example() * examples)
+        upload = (np.asarray(S, np.float64) @ layout.sizes) * 4.0
+        dur, t_comp, t_comm = T.cycle_times(
+            fleet, idx, trained_fl, fixed_fl, upload, fed.t_overhead,
+            fed.utilization, fed.jitter_sigma, state.rng)
+        self.fstate.dispatch(idx, now, state.round, pack_group_bits(S),
+                             dur, t_comp, t_comm, upload)
+
+    # -- completion absorption / flush ----------------------------------------
+
+    def _buf_append(self, chunk: np.ndarray) -> None:
+        fs = self.fstate
+        self._buf_client.append(chunk.copy())
+        self._buf_version.append(fs.version[chunk].copy())
+        self._buf_bits.append(fs.group_bits[chunk].copy())
+        self._buf_ticket.append(fs.updates[chunk].copy())
+        if self.grad_mode == "dispatch":
+            self._buf_loss.append(self._pend_loss[chunk].copy())
+            jc = jnp.asarray(chunk)
+            self._buf_deltas.append(
+                jax.tree.map(lambda x: x[jc], self._pend_deltas))
+        self._buf_count += len(chunk)
+
+    def _cohort_update(self, dataset, ids: np.ndarray, versions: np.ndarray,
+                       tickets: np.ndarray, S: np.ndarray
+                       ) -> tuple[Any, np.ndarray]:
+        """Cohort-sampled gradient computation: local updates for the M
+        flushed clients only, each starting from the ring snapshot of the
+        version it pulled (pulls older than the ring clamp to the oldest
+        retained snapshot; ``ring_clamped`` counts those)."""
+        fed, fleet, state = self.fed, self.fleet, self.state
+        R = max(1, fed.snapshot_ring)
+        vmin = max(0, state.round - R + 1)
+        v_eff = np.maximum(versions, vmin)
+        self.ring_clamped += int(np.sum(v_eff != versions))
+        start = jax.tree.map(lambda x: x[jnp.asarray(v_eff % R)], self._ring)
+
+        steps = fed.local_epochs * fed.steps_per_epoch
+        xs, ys = [], []
+        for c, t in zip(ids, tickets):  # counter-based draws: order-free
+            r = np.random.default_rng([fed.seed, int(c), int(t)])
+            src = int(c) % len(dataset.train_y)
+            bidx = r.integers(0, len(dataset.train_y[src]),
+                              size=(steps, fed.batch_size))
+            xs.append(dataset.train_x[src][bidx])
+            ys.append(dataset.train_y[src][bidx])
+        batches = {"x": jnp.asarray(np.stack(xs)),
+                   "y": jnp.asarray(np.stack(ys))}
+        gates = jnp.asarray(S, jnp.float32)
+        mmasks = jnp.asarray(fleet.modality_mask[ids], jnp.float32)
+        deltas, losses = self.local_update(
+            start, batches, mmasks, gates, self._rank_gate_rows(len(ids)),
+            fed.lr)
+        return deltas, np.asarray(losses)
+
+    def _flush_vec(self, dataset) -> dict:
+        client = np.concatenate(self._buf_client)
+        order = np.argsort(client, kind="stable")  # client-id order (parity)
+        ids = client[order]
+        versions = np.concatenate(self._buf_version)[order]
+        tickets = np.concatenate(self._buf_ticket)[order]
+        S = unpack_group_bits(np.concatenate(self._buf_bits)[order],
+                              self.task.layout.G)
+        staleness = (self.state.round - versions).astype(np.float64)
+        if self.grad_mode == "dispatch":
+            losses = np.concatenate(self._buf_loss)[order]
+            deltas = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                  *self._buf_deltas)
+            jorder = jnp.asarray(order)
+            deltas = jax.tree.map(lambda x: x[jorder], deltas)
+        elif self.grad_mode == "cohort":
+            deltas, losses = self._cohort_update(dataset, ids, versions,
+                                                 tickets, S)
+        else:
+            deltas, losses = None, None
+        for buf in (self._buf_client, self._buf_version, self._buf_bits,
+                    self._buf_ticket, self._buf_loss, self._buf_deltas):
+            buf.clear()
+        self._buf_count = 0
+
+        rec = self._flush_arrays(deltas, S, ids, losses, staleness)
+        if self.grad_mode == "cohort":  # retain the new version's snapshot
+            R = max(1, self.fed.snapshot_ring)
+            slot = self.state.round % R
+            self._ring = jax.tree.map(
+                lambda ring, t: ring.at[slot].set(t.astype(ring.dtype)),
+                self._ring, self.state.trainable)
+        return rec
+
+    def _absorb(self, gidx: np.ndarray, dataset, K: int,
+                log_every: int) -> None:
+        """Absorb one timestamp group of completions: energy accounting,
+        buffer append, flushes at every K-th entry — chunked so trace state
+        at each flush matches the one-event-at-a-time loop."""
+        fleet, fs = self.fleet, self.fstate
+        pos = 0
+        while pos < len(gidx):
+            room = K - self._buf_count
+            chunk = gidx[pos:pos + room]
+            pos += len(chunk)
+            fs.complete(fleet, chunk)
+            self.trace.record_completions(fleet, chunk, fs.t_comp[chunk],
+                                          fs.t_comm[chunk],
+                                          fs.upload_bytes[chunk])
+            self._buf_append(chunk)
+            if self._buf_count >= K:
+                rec = self._flush_vec(dataset)
+                self._log_and_eval(rec, dataset if self.grad_mode != "none"
+                                   else None, log_every,
+                                   f"vec:{self.strategy.name}")
+
+    # -- the vectorized event loop --------------------------------------------
+
+    def run(self, dataset=None, total_updates: int | None = None,
+            log_every: int = 0) -> dict:
+        """Absorb ``total_updates`` completions (default rounds * N), with
+        vectorized next-K event extraction over the completion-time array.
+        ``dataset`` may be None with ``grad_mode="none"``."""
+        fed, fleet, state = self.fed, self.fleet, self.state
+        if self.grad_mode != "none" and dataset is None:
+            raise ValueError(f"grad_mode={self.grad_mode!r} needs a dataset")
+        total = (total_updates or fed.total_updates
+                 or fed.rounds * fleet.N)
+        K = max(1, min(self.strategy.buffer_size, fleet.N))
+        fs = self.fstate
+        if fs.in_flight == 0:
+            self._dispatch_vec(np.nonzero(fs.alive)[0], state.sim_time,
+                               dataset)
+        processed = 0
+        last_t = state.sim_time
+        while processed < total and fs.in_flight > 0:
+            times, cand = fs.peek_window(K, fed.t_overhead)
+            if len(cand) > total - processed:
+                times = times[: total - processed]
+                cand = cand[: total - processed]
+            fs.claim(cand)
+            gstart = 0
+            while gstart < len(cand):
+                t0 = float(times[gstart])
+                gend = gstart + int(np.searchsorted(
+                    times[gstart:], t0, side="right"))
+                gidx = cand[gstart:gend]
+                gstart = gend
+                state.sim_time = t0
+                if self.population is not None:
+                    self.population.step(self._churn_rng, fs, t0 - last_t)
+                    gidx = gidx[fs.alive[gidx]]  # departures lose updates
+                last_t = t0
+                if len(gidx) == 0:
+                    continue
+                self._absorb(gidx, dataset, K, log_every)
+                processed += len(gidx)
+                if processed >= total:
+                    break
+                redisp = gidx
+                if self.population is not None:
+                    arrived = np.nonzero(
+                        fs.alive & np.isinf(fs.t_next))[0]
+                    arrived = arrived[~np.isin(arrived, redisp)]
+                    redisp = np.concatenate([redisp, arrived])
+                self._dispatch_vec(redisp, t0, dataset)
+        self.trace.sim_time = state.sim_time
+        self.trace.per_client_updates = fs.updates.copy()
+        if (self.grad_mode != "none" and dataset is not None
+                and not self.history["f1"]):
+            self.history["f1"].append(self.evaluate(dataset))
+            self.history["f1_flush"].append(self.state.round)
+        return self.history

@@ -142,10 +142,23 @@ def _depth_order(layout: mdlora.GroupLayout) -> np.ndarray:
     return np.array(sorted(range(layout.G), key=rank), np.int32)
 
 
-def allocate(strategy: Strategy, state: FedState, task: MMTask,
-             fleet: FleetConfig, fed: FedConfig,
-             group_flops: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """-> (S [N, G] bool selection, k [N] budgets)."""
+@dataclasses.dataclass(frozen=True)
+class AllocPlan:
+    """Fleet-static inputs of allocation, precomputed once per run.
+
+    Everything here depends only on (strategy, layout, fleet, fed): candidate
+    and mandatory masks, and the elastic budgets (Eq. 7 — ``t_star`` is a
+    fleet-wide binary search, so it must be solved over the FULL fleet even
+    when only a dispatch batch is being allocated; caching it here is what
+    makes per-batch allocation O(batch) instead of O(N))."""
+    cand: np.ndarray  # [N, G] candidate groups
+    mandatory: np.ndarray  # [N, G] forced inclusions
+    k: np.ndarray  # [N] group budgets
+    depth_order: np.ndarray | None = None  # [G] (depth baselines only)
+
+
+def plan_allocation(strategy: Strategy, task: MMTask, fleet: FleetConfig,
+                    fed: FedConfig, group_flops: np.ndarray) -> AllocPlan:
     layout = task.layout
     N, G = fleet.N, layout.G
     accessible = layout.accessible(fleet.modality_mask)
@@ -167,28 +180,52 @@ def allocate(strategy: Strategy, state: FedState, task: MMTask,
         k = AL.elastic_budgets(tau, t_star, fed.t_overhead, n_mand, g_max)
     else:
         k = g_max.copy()
+    order = _depth_order(layout) if strategy.alloc == "depth" else None
+    return AllocPlan(cand, mandatory, k, order)
 
+
+def allocate_rows(plan: AllocPlan, strategy: Strategy, state: FedState,
+                  idx: np.ndarray) -> np.ndarray:
+    """S rows [len(idx), G] for the client subset ``idx``.
+
+    Row-identical to ``allocate(...)[0][idx]`` for every deterministic
+    allocator (scores are shared fleet-wide state, budgets come from the
+    plan); ``alloc="random"`` draws fresh noise per call, so only
+    whole-fleet calls reproduce the legacy stream."""
+    idx = np.asarray(idx)
+    cand = plan.cand[idx]
+    mandatory = plan.mandatory[idx]
+    k = plan.k[idx]
     if strategy.alloc in ("full", "accessible"):
-        return cand, k
+        return cand
     if strategy.alloc == "divergence":
         score = state.dbar
     elif strategy.alloc == "magnitude":
         score = state.mag_ema
     elif strategy.alloc == "random":
         return AL.allocate_topk(state.dbar, cand, mandatory, k,
-                                rng=state.rng, randomize=True), k
+                                rng=state.rng, randomize=True)
     elif strategy.alloc == "depth":
-        order = _depth_order(task.layout)
-        S = np.zeros((N, G), bool)
+        G = cand.shape[1]
+        order = plan.depth_order
+        S = np.zeros_like(cand)
         offset = (state.round % max(G, 1)) if strategy.depth_rotate else 0
-        for n in range(N):
+        for n in range(len(idx)):
             take = [order[(offset + i) % G] for i in range(G)
                     if cand[n, order[(offset + i) % G]]][: int(k[n])]
             S[n, take] = True
-        return S, k
+        return S
     else:
         raise ValueError(strategy.alloc)
-    return AL.allocate_topk(score, cand, mandatory, k), k
+    return AL.allocate_topk(score, cand, mandatory, k)
+
+
+def allocate(strategy: Strategy, state: FedState, task: MMTask,
+             fleet: FleetConfig, fed: FedConfig,
+             group_flops: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """-> (S [N, G] bool selection, k [N] budgets)."""
+    plan = plan_allocation(strategy, task, fleet, fed, group_flops)
+    return allocate_rows(plan, strategy, state, np.arange(fleet.N)), plan.k
 
 
 # ---------------------------------------------------------------------------
@@ -196,24 +233,22 @@ def allocate(strategy: Strategy, state: FedState, task: MMTask,
 # ---------------------------------------------------------------------------
 
 
-def _personal_leaf_mask(task: MMTask, strategy: Strategy) -> Any:
-    """pytree of bool: True where the leaf stays local (never aggregated)."""
+def _personal_leaf_mask(proto: Any, strategy: Strategy) -> Any:
+    """pytree of bool: True where the leaf stays local (never aggregated).
+
+    ``proto`` is the run's trainable prototype — passed explicitly (runs
+    carry it as an attribute) rather than via the old ``id(task)``-keyed
+    global cache, whose ids could dangle once tasks were garbage-collected.
+    """
     def is_personal(p: str) -> bool:
         if strategy.share_only:
             return not any(s in p for s in strategy.share_only)
         return any(s in p for s in strategy.personal)
 
     leaves, treedef = jax.tree_util.tree_flatten_with_path(
-        jax.tree.map(lambda x: 0, task_trainable_proto(task)))
+        jax.tree.map(lambda x: 0, proto))
     return jax.tree_util.tree_unflatten(
         treedef, [is_personal(mdlora.path_str(p)) for p, _ in leaves])
-
-
-_PROTO_CACHE: dict[int, Any] = {}
-
-
-def task_trainable_proto(task: MMTask):
-    return _PROTO_CACHE[id(task)]
 
 
 def _clusters(fleet: FleetConfig) -> np.ndarray:
@@ -223,9 +258,8 @@ def _clusters(fleet: FleetConfig) -> np.ndarray:
     return np.array([uniq[k] for k in keys], np.int32)
 
 
-def _rank_gates(task: MMTask, strategy: Strategy, fleet: FleetConfig) -> Any:
+def _rank_gates(proto: Any, strategy: Strategy, fleet: FleetConfig) -> Any:
     """HeLoRA: [N]-stacked multiplicative masks zeroing LoRA rank tails."""
-    proto = task_trainable_proto(task)
     N = fleet.N
     if not strategy.rank_caps:
         return jax.tree.map(lambda x: jnp.ones((N,) + x.shape, x.dtype), proto)
@@ -268,11 +302,11 @@ class FedRun:
     rank_gate: Any
     personal_mask: Any
     history: dict
+    proto: Any  # trainable prototype (zero-round shapes/dtypes)
 
     @classmethod
     def create(cls, task: MMTask, trainable0: Any, strategy: Strategy,
                fleet: FleetConfig, fed: FedConfig) -> "FedRun":
-        _PROTO_CACHE[id(task)] = trainable0
         G = task.layout.G
         state = FedState(
             round=0, trainable=trainable0,
@@ -281,13 +315,13 @@ class FedRun:
             dbar=np.ones(G) * 1e-6, mag_ema=np.ones(G),
             rng=np.random.default_rng(fed.seed))
         lu = make_local_update(task, fed, strategy.prox_mu)
-        rank_gate = _rank_gates(task, strategy, fleet)
-        pmask = _personal_leaf_mask(task, strategy)
+        rank_gate = _rank_gates(trainable0, strategy, fleet)
+        pmask = _personal_leaf_mask(trainable0, strategy)
         history = {"round": [], "loss": [], "round_time_s": [],
                    "energy_j": [], "upload_mb": [], "f1": [], "f1_round": [],
                    "divergence": [], "selected_frac": []}
         return cls(task, strategy, fleet, fed, state, lu, rank_gate, pmask,
-                   history)
+                   history, trainable0)
 
     # -- data plumbing --------------------------------------------------------
 

@@ -53,6 +53,10 @@ class FleetConfig:
     idle_power: np.ndarray  # [N] W
     bandwidth_mbps: np.ndarray  # [N]
     type_names: list[str]
+    # lazily-built str array mirror of type_names, so repeated subset() calls
+    # (one per event-loop dispatch) fancy-index instead of list-comprehending
+    _names_arr: np.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def N(self) -> int:
@@ -61,6 +65,21 @@ class FleetConfig:
     @property
     def M(self) -> int:
         return self.modality_mask.shape[1]
+
+    def names_array(self) -> np.ndarray:
+        if (self._names_arr is None
+                or len(self._names_arr) != len(self.type_names)):
+            self._names_arr = np.asarray(self.type_names)
+        return self._names_arr
+
+    def subset(self, idx) -> "FleetConfig":
+        """Fleet restricted to client indices ``idx`` (sliced arrays; names
+        via the cached string array, not a per-call list comprehension)."""
+        idx = np.asarray(idx)
+        return FleetConfig(self.modality_mask[idx], self.tops[idx],
+                           self.active_power[idx], self.comm_power[idx],
+                           self.idle_power[idx], self.bandwidth_mbps[idx],
+                           self.names_array()[idx].tolist())
 
 
 def make_fleet(n_full: int, n_mid: int, n_low: int, M: int = 4,
@@ -103,7 +122,4 @@ def scale_fleet(fleet: FleetConfig, n_clients: int,
                 rng: np.random.Generator) -> FleetConfig:
     """Tables IV-V fleet-size sweep: replicate the type mixture to N."""
     idx = rng.integers(0, fleet.N, size=n_clients)
-    return FleetConfig(fleet.modality_mask[idx], fleet.tops[idx],
-                       fleet.active_power[idx], fleet.comm_power[idx],
-                       fleet.idle_power[idx], fleet.bandwidth_mbps[idx],
-                       [fleet.type_names[i] for i in idx])
+    return fleet.subset(idx)

@@ -94,14 +94,7 @@ def completion_times(fleet: FleetConfig, clients: np.ndarray,
     per-interaction server overhead. jitter_sigma > 0 multiplies compute by
     lognormal(0, sigma) noise (mean ~1), modelling OS/thermal variance.
     """
-    sub = FleetConfig(
-        modality_mask=fleet.modality_mask[clients],
-        tops=fleet.tops[clients],
-        active_power=fleet.active_power[clients],
-        comm_power=fleet.comm_power[clients],
-        idle_power=fleet.idle_power[clients],
-        bandwidth_mbps=fleet.bandwidth_mbps[clients],
-        type_names=[fleet.type_names[i] for i in clients])
+    sub = fleet.subset(clients)
     t_comp, t_comm = per_client_times(sub, trained_flops, fixed_flops,
                                       upload_bytes, utilization)
     if jitter_sigma > 0.0 and rng is not None:
@@ -132,6 +125,20 @@ class AsyncTrace:
         self.upload_mb += upload_bytes / 1e6
         if self.per_client_updates is not None:
             self.per_client_updates[client] += 1
+
+    def record_completions(self, fleet: FleetConfig, clients: np.ndarray,
+                           t_comp: np.ndarray, t_comm: np.ndarray,
+                           upload_bytes: np.ndarray) -> None:
+        """Vectorized ``record_completion`` over a completion batch (the
+        structure-of-arrays runtime absorbs whole timestamp groups)."""
+        clients = np.asarray(clients)
+        self.completions += int(clients.size)
+        self.energy_j += float(
+            np.sum(fleet.active_power[clients] * t_comp
+                   + fleet.comm_power[clients] * t_comm))
+        self.upload_mb += float(np.sum(upload_bytes)) / 1e6
+        if self.per_client_updates is not None:
+            np.add.at(self.per_client_updates, clients, 1)
 
     def as_dict(self) -> dict:
         return {"sim_time_s": self.sim_time, "completions": self.completions,

@@ -55,6 +55,31 @@ def per_client_times(fleet: FleetConfig, trained_flops: np.ndarray,
     return t_comp, t_comm
 
 
+def cycle_times(fleet: FleetConfig, idx: np.ndarray,
+                trained_flops: np.ndarray, fixed_flops: np.ndarray,
+                upload_bytes: np.ndarray, t_overhead: float,
+                utilization: float, jitter_sigma: float = 0.0,
+                rng: np.random.Generator | None = None
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched (dispatch -> completion) cycle draw for clients ``idx``.
+
+    Same arithmetic as ``per_client_times`` on ``fleet.subset(idx)`` but
+    indexing the fleet arrays directly — no FleetConfig copy, so the
+    vectorized runtime can draw for a million-client initial dispatch or a
+    two-client redispatch at the same per-element cost.
+    -> (duration, t_comp, t_comm), duration = comp + comm + overhead.
+    """
+    idx = np.asarray(idx)
+    eff = fleet.tops[idx] * 1e12 * utilization
+    t_comp = (np.asarray(trained_flops, np.float64)
+              + np.asarray(fixed_flops, np.float64)) / eff
+    t_comm = (np.asarray(upload_bytes, np.float64) * 8.0
+              / (fleet.bandwidth_mbps[idx] * 1e6))
+    if jitter_sigma > 0.0 and rng is not None:
+        t_comp = t_comp * rng.lognormal(0.0, jitter_sigma, size=t_comp.shape)
+    return t_comp + t_comm + t_overhead, t_comp, t_comm
+
+
 def simulate_round(fleet: FleetConfig, selected: np.ndarray,
                    trained_flops: np.ndarray, fixed_flops: np.ndarray,
                    upload_bytes: np.ndarray, t_overhead: float = 0.05,
