@@ -660,6 +660,7 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
                 times = times[: total - processed]
                 cand = cand[: total - processed]
             fs.claim(cand)
+            arrivals: list[np.ndarray] = []
             gstart = 0
             while gstart < len(cand):
                 t0 = float(times[gstart])
@@ -669,8 +670,13 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
                 gstart = gend
                 state.sim_time = t0
                 if self.population is not None:
-                    self.population.step(self._churn_rng, fs, t0 - last_t)
-                    gidx = gidx[fs.alive[gidx]]  # departures lose updates
+                    _, arrived = self.population.step(self._churn_rng, fs,
+                                                      t0 - last_t)
+                    if len(arrived):
+                        arrivals.append(arrived)
+                    # departures lose their update — even if they re-arrive
+                    # before their claimed event's group is processed
+                    gidx = gidx[fs.alive[gidx] & ~fs.lost[gidx]]
                 last_t = t0
                 if len(gidx) == 0:
                     continue
@@ -678,13 +684,16 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
                 processed += len(gidx)
                 if processed >= total:
                     break
-                redisp = gidx
-                if self.population is not None:
-                    arrived = np.nonzero(
-                        fs.alive & np.isinf(fs.t_next))[0]
-                    arrived = arrived[~np.isin(arrived, redisp)]
-                    redisp = np.concatenate([redisp, arrived])
-                self._dispatch_vec(redisp, t0, dataset)
+                self._dispatch_vec(gidx, t0, dataset)
+            if arrivals and processed < total:
+                # genuine re-arrivals from population.step() only — claimed
+                # events of this window all have t_next=inf, so an idle-scan
+                # would double-dispatch clients whose completion is still
+                # pending in a later timestamp group. Dispatched after the
+                # window resolves, since dispatch clears ``lost``.
+                arr = np.unique(np.concatenate(arrivals))
+                self._dispatch_vec(arr[fs.alive[arr]], state.sim_time,
+                                   dataset)
         self.trace.sim_time = state.sim_time
         self.trace.per_client_updates = fs.updates.copy()
         if (self.grad_mode != "none" and dataset is not None

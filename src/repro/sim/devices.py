@@ -52,9 +52,11 @@ class FleetConfig:
     comm_power: np.ndarray  # [N] W
     idle_power: np.ndarray  # [N] W
     bandwidth_mbps: np.ndarray  # [N]
-    type_names: list[str]
+    type_names: list[str]  # immutable after construction (cached below)
     # lazily-built str array mirror of type_names, so repeated subset() calls
-    # (one per event-loop dispatch) fancy-index instead of list-comprehending
+    # (one per event-loop dispatch) fancy-index instead of list-comprehending.
+    # Built once on first use — mutating type_names afterwards is unsupported
+    # (a length heuristic would miss same-length in-place replacement).
     _names_arr: np.ndarray | None = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -67,8 +69,7 @@ class FleetConfig:
         return self.modality_mask.shape[1]
 
     def names_array(self) -> np.ndarray:
-        if (self._names_arr is None
-                or len(self._names_arr) != len(self.type_names)):
+        if self._names_arr is None:
             self._names_arr = np.asarray(self.type_names)
         return self._names_arr
 

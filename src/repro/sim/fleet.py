@@ -19,6 +19,11 @@ indexed by client id:
                  [N] cumulative per-client account (the SoA analog of
                  AsyncTrace.per_client_updates)
     alive        [N] population membership (churn model below)
+    lost         [N] the client's pending completion was cancelled by a
+                 departure — claimed-but-unabsorbed events can't be told
+                 apart from idle by ``t_next`` alone, so cancellation is
+                 tracked explicitly; only the next dispatch clears it
+                 (re-arrival does NOT resurrect a lost update)
 
 Event extraction replaces the heap with ``peek_window``: one
 ``np.partition`` pass finds the k-th smallest completion time, one threshold
@@ -70,6 +75,7 @@ class FleetState:
     energy_j: np.ndarray  # [N] cumulative energy
     updates: np.ndarray  # [N] int64 cumulative completions
     alive: np.ndarray  # [N] bool population membership
+    lost: np.ndarray  # [N] bool pending completion cancelled by departure
     next_seq: int = 0
     in_flight: int = 0
 
@@ -82,7 +88,8 @@ class FleetState:
                    t_comp=np.zeros(n), t_comm=np.zeros(n),
                    upload_bytes=np.zeros(n), energy_j=np.zeros(n),
                    updates=np.zeros(n, np.int64),
-                   alive=np.ones(n, bool))
+                   alive=np.ones(n, bool),
+                   lost=np.zeros(n, bool))
 
     @property
     def N(self) -> int:
@@ -106,6 +113,7 @@ class FleetState:
         self.t_comp[idx] = t_comp
         self.t_comm[idx] = t_comm
         self.upload_bytes[idx] = upload_bytes
+        self.lost[idx] = False
         self.in_flight += b
 
     def peek_window(self, k: int, gap: float
@@ -151,15 +159,19 @@ class FleetState:
 
     def depart(self, idx: np.ndarray) -> None:
         """Remove clients from the population: any in-flight work is lost
-        and they stop accruing energy/updates until they re-arrive."""
+        and they stop accruing energy/updates until they re-arrive. ``lost``
+        marks the cancelled completion so a claimed-but-unabsorbed event is
+        dropped at absorb time even if the client re-arrives first."""
         if len(idx) == 0:
             return
         self.in_flight -= int(np.isfinite(self.t_next[idx]).sum())
         self.t_next[idx] = np.inf
         self.alive[idx] = False
+        self.lost[idx] = True
 
     def arrive(self, idx: np.ndarray) -> None:
-        """Re-admit departed clients (idle until the runtime dispatches)."""
+        """Re-admit departed clients (idle until the runtime dispatches;
+        ``lost`` stays set — a cancelled completion is never resurrected)."""
         self.alive[idx] = True
 
 

@@ -89,6 +89,24 @@ def test_peek_window_gap_truncation():
     np.testing.assert_array_equal(idx, [2])
 
 
+def test_depart_cancels_pending_even_after_rearrival():
+    """A departure cancels the client's pending completion whether it is
+    still scheduled or already claimed; re-arrival does not resurrect it —
+    only the next dispatch clears the ``lost`` mark."""
+    fs = FleetState.create(4)
+    _dispatch_at(fs, [0, 1, 2, 3], [1.0, 2.0, 3.0, 4.0])
+    fs.claim(np.array([0, 1]))  # window extracted, not yet absorbed
+    fs.depart(np.array([1, 2]))  # 1 = claimed event, 2 = scheduled event
+    assert fs.in_flight == 1  # only 3 remains scheduled (0 is claimed)
+    assert fs.lost[[1, 2]].all() and not fs.lost[[0, 3]].any()
+    fs.arrive(np.array([1, 2]))
+    assert fs.alive[[1, 2]].all()
+    assert fs.lost[[1, 2]].all()  # cancelled completions stay cancelled
+    _dispatch_at(fs, [1], [5.0], now=4.0)
+    assert not fs.lost[1] and fs.lost[2]
+    assert fs.in_flight == 2
+
+
 def test_population_step_departs_and_arrives():
     fs = FleetState.create(100)
     _dispatch_at(fs, np.arange(100), np.full(100, 1.0))
@@ -226,6 +244,25 @@ def test_churned_clients_stop_accruing(setup):
     np.testing.assert_array_equal(fs.energy_j[departed], e0)
     np.testing.assert_array_equal(fs.updates[departed], u0)
     assert fs.updates[fs.alive].sum() > live_updates0
+
+
+def test_churn_inflight_invariant(setup):
+    """Regression: claimed-but-unabsorbed events of the current peek window
+    (claim() sets t_next=inf up front) must not be mistaken for re-arrivals
+    and double-dispatched. After any churn/arrival run the in-flight counter
+    equals the number of scheduled completions, and every absorbed
+    completion is accounted exactly once."""
+    _, task, tr0 = setup
+    for fed_kw in ({"churn_rate": 0.5},
+                   {"churn_rate": 0.5, "arrival_rate": 0.5}):
+        run = _vec_run(task, tr0, 500,
+                       {"grad_mode": "none", "jitter_sigma": 0.1, **fed_kw},
+                       total=1500)
+        fs = run.fstate
+        assert run.trace.completions == 1500, fed_kw
+        assert fs.in_flight == int(np.isfinite(fs.t_next).sum()), fed_kw
+        assert fs.in_flight <= int(fs.alive.sum()), fed_kw
+        assert fs.updates.sum() == 1500, fed_kw
 
 
 def test_throughput_1e5_clients_200_flushes(setup):
