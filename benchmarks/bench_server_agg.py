@@ -1,0 +1,182 @@
+"""Server-side ingest benchmark: fused quantized aggregation vs unfused.
+
+Compares the two ways the server can turn a buffered cohort of int8 client
+uploads into the Eq. 3 aggregate + Eq. 5 divergence statistics:
+
+    unfused  dequantize the [N, D, r] int8 stack to fp32, apply the FedBuff
+             staleness discount to the weights, then run the plain
+             cohort_agg_divergence reduction — three jit'd stages with the
+             fp32 client stack materialized in between (4 bytes/param of
+             HBM/cache traffic before the reduction even starts).
+    fused    cohort_agg_divergence_quant: one pass straight off the int8
+             payload, dequantizing tiles and applying the per-client
+             staleness discount inside the same accumulation — the fp32
+             stack never exists.
+
+Sweeps cohort size N in {64, 1024, 16384} at a fixed chunk shape
+(D=1024, r=4) and reports median wall time per ingest plus the fused
+speedup. A pallas(interpret) cell runs at N=64 for numerical cross-checking
+only — interpret mode is not a performance configuration.
+
+Outputs
+    benchmarks/results/bench_server_agg.json   full sweep (schema-stable)
+    BENCH_server.json (repo root)              committed baseline, written
+                                               by --update-baseline; --smoke
+                                               runs the N=1024 cell only and
+                                               exits nonzero if the fused
+                                               ingest got more than 2x
+                                               slower than it (CI perf gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, SCHEMA_VERSION, write_json
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                             "BENCH_server.json")
+D, R = 1024, 4  # per-client chunk shape (rows x LoRA rank)
+NS = (64, 1024, 16384)
+SMOKE_N = 1024
+EXPONENT = 0.5  # FedBuff staleness discount 1/(1+s)^a
+REPS = 5
+REGRESSION_FACTOR = 2.0
+
+
+def _payload(n: int, seed: int = 0):
+    """One buffered cohort: int8 uploads + scales, weights, cohort mask."""
+    rng = np.random.default_rng(seed)
+    import jax.numpy as jnp
+    q = jnp.asarray(rng.integers(-127, 128, (n, D, R), dtype=np.int8))
+    scales = jnp.asarray(rng.uniform(1e-4, 1e-2, n).astype(np.float32))
+    W = jnp.asarray(rng.uniform(0.0, 1.0, (n, D)).astype(np.float32))
+    C = jnp.asarray((rng.uniform(size=(n, D)) < 0.7).astype(np.float32))
+    staleness = jnp.asarray(
+        rng.integers(0, 8, n).astype(np.float32))
+    return q, scales, W, C, staleness
+
+
+def _timeit(fn, *args) -> float:
+    """Median wall ms over REPS, after a compile/warm-up call."""
+    import jax
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e3
+
+
+def _cell(n: int, impl: str, seed: int = 0) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.cohort_agg import (cohort_agg_divergence,
+                                          cohort_agg_divergence_quant)
+
+    q, scales, W, C, staleness = _payload(n, seed)
+
+    # -- unfused reference path: three stages, fp32 stack materialized --
+    @jax.jit
+    def dequant(q, scales):
+        return q.astype(jnp.float32) * scales[:, None, None]
+
+    @jax.jit
+    def discount(W, staleness):
+        return W * jnp.power(1.0 + staleness, -EXPONENT)[:, None]
+
+    def unfused(q, scales, W, C, staleness):
+        deltas = jax.block_until_ready(dequant(q, scales))
+        W_eff = jax.block_until_ready(discount(W, staleness))
+        return cohort_agg_divergence(deltas, W_eff, C, impl=impl)
+
+    def fused(q, scales, W, C, staleness):
+        return cohort_agg_divergence_quant(q, scales, W, C, staleness,
+                                           exponent=EXPONENT, impl=impl)
+
+    # numerical cross-check before timing
+    for a, b in zip(fused(q, scales, W, C, staleness),
+                    unfused(q, scales, W, C, staleness)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+    unfused_ms = _timeit(unfused, q, scales, W, C, staleness)
+    fused_ms = _timeit(fused, q, scales, W, C, staleness)
+    int8_mb = n * D * R / 2**20
+    return {
+        "n": n, "d": D, "r": R, "impl": impl, "exponent": EXPONENT,
+        "payload_int8_mb": round(int8_mb, 2),
+        "fp32_stack_mb": round(4 * int8_mb, 2),
+        "unfused_ms": round(unfused_ms, 3),
+        "fused_ms": round(fused_ms, 3),
+        "fused_speedup": round(unfused_ms / max(fused_ms, 1e-9), 3),
+        "fused_gbps": round(n * D * R / 2**30 / (fused_ms / 1e3), 2),
+    }
+
+
+def run_sweep(smoke: bool = False, seed: int = 0) -> list[dict]:
+    rows = []
+    ns = (SMOKE_N,) if smoke else NS
+    for n in ns:
+        rows.append(_cell(n, "xla", seed=seed))
+        r = rows[-1]
+        print(f"  N={n:>6,d} xla     unfused {r['unfused_ms']:9.2f}ms "
+              f"fused {r['fused_ms']:9.2f}ms  "
+              f"speedup {r['fused_speedup']:5.2f}x")
+    if not smoke:
+        # interpret-mode pallas at the smallest N: numerics cross-check only
+        rows.append(_cell(64, "pallas", seed=seed))
+        r = rows[-1]
+        print(f"  N={64:>6,d} pallas  unfused {r['unfused_ms']:9.2f}ms "
+              f"fused {r['fused_ms']:9.2f}ms  (interpret — not a perf cell)")
+    return rows
+
+
+def check_regression(rows: list[dict]) -> int:
+    """CI gate: N=1024 fused ingest must stay within REGRESSION_FACTOR of
+    the committed baseline."""
+    if not os.path.exists(BASELINE_PATH):
+        print("no committed BENCH_server.json baseline; skipping gate")
+        return 0
+    with open(BASELINE_PATH) as f:
+        base = json.load(f)
+    base_row = next((r for r in base.get("rows", [])
+                     if r["n"] == SMOKE_N and r["impl"] == "xla"), None)
+    cur_row = next((r for r in rows
+                    if r["n"] == SMOKE_N and r["impl"] == "xla"), None)
+    if base_row is None or cur_row is None:
+        print("baseline or current N=1024 row missing; skipping gate")
+        return 0
+    ceil = base_row["fused_ms"] * REGRESSION_FACTOR
+    status = "OK" if cur_row["fused_ms"] <= ceil else "REGRESSION"
+    print(f"perf gate: fused {cur_row['fused_ms']:.2f}ms vs baseline "
+          f"{base_row['fused_ms']:.2f}ms (ceiling {ceil:.2f}ms) -> {status}")
+    return 0 if status == "OK" else 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="N=1024 cell only + regression gate (CI)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write the committed BENCH_server.json baseline")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    rows = run_sweep(smoke=args.smoke, seed=args.seed)
+    payload = {"schema_version": SCHEMA_VERSION, "reps": REPS, "rows": rows}
+    write_json(os.path.join(RESULTS_DIR, "bench_server_agg.json"), payload)
+    if args.update_baseline:
+        write_json(os.path.abspath(BASELINE_PATH), payload)
+        print(f"baseline written: {os.path.abspath(BASELINE_PATH)}")
+    return check_regression(rows)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -34,6 +34,9 @@ def main():
                     help="Full/Low compute gap (paper Tables IV-V)")
     ap.add_argument("--jitter", type=float, default=0.0,
                     help="lognormal compute-time noise sigma")
+    ap.add_argument("--codec", default="none", choices=("none", "int8"),
+                    help="uplink codec: int8 quantizes client deltas "
+                         "(error feedback on-device, fused server ingest)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -62,7 +65,8 @@ def main():
     afed = AsyncFedConfig(rounds=args.rounds,
                           eval_every=max(args.rounds // 2, 1),
                           seed=args.seed, utilization=2e-5, t_overhead=1e-3,
-                          jitter_sigma=args.jitter)
+                          jitter_sigma=args.jitter,
+                          uplink_codec=args.codec)
     arun = AsyncFedRun.create(
         task, tr0, async_relief(buffer_size=args.buffer,
                                 staleness_exponent=args.staleness_exp),

@@ -13,6 +13,7 @@
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
@@ -26,7 +27,8 @@ Array = jax.Array
 
 def cohort_weights(layout: mdlora.GroupLayout, trained: Array,
                    modality_mask: Array,
-                   client_scale: Array | None = None) -> Array:
+                   client_scale: Array | None = None,
+                   defer_scale: bool = False) -> Array:
     """RELIEF combine weights W: [N, G].
 
     trained: [N, G] float/bool — which groups each client trained+uploaded
@@ -35,6 +37,10 @@ def cohort_weights(layout: mdlora.GroupLayout, trained: Array,
     client_scale: optional [N] multiplicative per-client weight applied
     *inside* the normalization (the async runtime passes its staleness
     discounts here, so a stale update shrinks relative to its cohort).
+    defer_scale: keep ``client_scale`` in the denominator but *not* the
+    numerator — for consumers that re-apply the per-client factor inside a
+    fused reduction (the quantized-ingest kernel computes W * 1/(1+s)^a on
+    the fly), so W_deferred * client_scale == W_full up to fp rounding.
     Empty cohort => all-zero column (the block stays frozen this round).
     """
     trained = jnp.asarray(trained, jnp.float32)
@@ -44,11 +50,13 @@ def cohort_weights(layout: mdlora.GroupLayout, trained: Array,
     is_b = jnp.asarray(kinds == mdlora.KIND_FUSION_B)  # [G]
 
     u = jnp.where(is_b[None, :], (mcount / M)[:, None], 1.0)  # [N, G]
-    w = trained * u
+    w = num = trained * u
     if client_scale is not None:
         w = w * jnp.asarray(client_scale, jnp.float32)[:, None]
+        if not defer_scale:
+            num = w
     denom = jnp.sum(w, axis=0, keepdims=True)  # [1, G]
-    return jnp.where(denom > 0, w / jnp.maximum(denom, 1e-12), 0.0)
+    return jnp.where(denom > 0, num / jnp.maximum(denom, 1e-12), 0.0)
 
 
 def staleness_discounts(staleness: Array, exponent: float) -> Array:
@@ -81,6 +89,21 @@ def aggregate(layout: mdlora.GroupLayout, global_trainable: Any,
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass
+class QuantizedStack:
+    """A client-stacked int8 uplink payload: ``q`` leaves are [K, ...] int8
+    and ``scales`` leaves are the matching [K] per-(client, leaf) dequant
+    scales, as produced by ``dist.quantize_int8_stacked``. The server flush
+    paths ingest this natively through ``CohortAggBuffer.push_quantized`` —
+    the fp32 client stack is never rebuilt in HBM."""
+    q: Any
+    scales: Any
+
+    @property
+    def n_clients(self) -> int:
+        return jax.tree.leaves(self.q)[0].shape[0]
+
+
 class CohortAggBuffer:
     """Streaming/accumulating variant of the fused cohort-agg reduction.
 
@@ -90,20 +113,25 @@ class CohortAggBuffer:
     would stream arrivals. This class accumulates Eq. 3 aggregates and the
     Eq. 5 divergence sufficient statistics chunk by chunk:
 
-        push(deltas [K,...], W [K,G], C [K,G])   any number of times
+        push(deltas [K,...], W [K,G], C [K,G])            fp32 uplink
+        push_quantized(q, scales, W, C, staleness, a)     int8 uplink
         finalize() -> (agg tree, divergence [G], cohort counts [G])
 
     The row-blocked fusion leaf goes through ``kernels/cohort_agg`` —
-    ``impl="pallas"`` runs the fused Pallas kernel (interpret-mode on CPU),
-    ``impl="xla"`` its einsum oracle; both produce the aggregate and the
-    per-row (sqsum, mean, count) stats in one pass over the chunk. All other
-    leaves use the same masked einsum reductions as ``weighted_combine``.
-    Empty cohorts finalize to zero aggregate and zero divergence (frozen
-    block), never NaN.
+    ``impl="pallas"`` runs the fused Pallas kernel (interpret-mode on CPU —
+    auto-detected when ``interpret`` is None), ``impl="xla"`` its einsum
+    oracle; both produce the aggregate and the per-row (sqsum, mean, count)
+    stats in one pass over the chunk. ``bd=None`` autotunes the kernel block
+    size per shape; explicit values snap to the largest divisor of D, so
+    blocking survives non-divisible row dimensions. All other leaves use the
+    same masked einsum reductions as ``weighted_combine``. Empty cohorts
+    finalize to zero aggregate and zero divergence (frozen block), never
+    NaN.
     """
 
     def __init__(self, layout: mdlora.GroupLayout, proto: Any,
-                 impl: str = "xla", interpret: bool = True, bd: int = 256):
+                 impl: str = "xla", interpret: bool | None = None,
+                 bd: int | None = None):
         self.layout = layout
         self.impl = impl
         self.interpret = interpret
@@ -123,6 +151,15 @@ class CohortAggBuffer:
         self._sq = self._zero_g
         self._cnt = self._zero_g
 
+    def _commit(self, treedef, agg_out, csum_out, sq: Array,
+                C: Array) -> None:
+        agg_tree = jax.tree_util.tree_unflatten(treedef, agg_out)
+        csum_tree = jax.tree_util.tree_unflatten(treedef, csum_out)
+        self._agg = jax.tree.map(jnp.add, self._agg, agg_tree)
+        self._csum = jax.tree.map(jnp.add, self._csum, csum_tree)
+        self._sq = self._sq + sq
+        self._cnt = self._cnt + jnp.sum(C, axis=0)
+
     def push(self, deltas: Any, W: Array, C: Array) -> None:
         """deltas: client-stacked pytree ([K, ...] leaves); W/C: [K, G]
         combine weights and divergence-cohort mask for this chunk."""
@@ -138,12 +175,10 @@ class CohortAggBuffer:
             p = mdlora.path_str(path)
             x = leaf.astype(jnp.float32)
             if p == layout.fusion_a_path:
-                rg = layout.row_group_vector(leaf.shape[1])
-                rg_j = jnp.asarray(rg)
-                bd = leaf.shape[1] if leaf.shape[1] % self.bd else self.bd
+                rg_j = jnp.asarray(layout.row_group_vector(leaf.shape[1]))
                 agg_a, sq_rows, mean_rows, cnt_rows = cohort_agg_divergence(
                     x, W[:, rg_j], C[:, rg_j], impl=self.impl,
-                    interpret=self.interpret, bd=bd)
+                    interpret=self.interpret, bd=self.bd)
                 agg_out.append(agg_a)
                 csum_out.append(mean_rows * cnt_rows[:, None])
                 sq = sq.at[rg_j].add(sq_rows)
@@ -164,12 +199,76 @@ class CohortAggBuffer:
             else:
                 agg_out.append(jnp.zeros(leaf.shape[1:], jnp.float32))
                 csum_out.append(jnp.zeros(leaf.shape[1:], jnp.float32))
-        agg_tree = jax.tree_util.tree_unflatten(treedef, agg_out)
-        csum_tree = jax.tree_util.tree_unflatten(treedef, csum_out)
-        self._agg = jax.tree.map(jnp.add, self._agg, agg_tree)
-        self._csum = jax.tree.map(jnp.add, self._csum, csum_tree)
-        self._sq = self._sq + sq
-        self._cnt = self._cnt + jnp.sum(C, axis=0)
+        self._commit(treedef, agg_out, csum_out, sq, C)
+
+    def push_quantized(self, q: Any, scales: Any, W: Array, C: Array,
+                       staleness: Array | None = None,
+                       exponent: float = 0.0) -> None:
+        """One-pass compressed ingest: int8 client chunks, dequantized and
+        staleness-discounted inside the reduction.
+
+        q: client-stacked pytree ([K, ...] int8 leaves); scales: matching
+        [K] per-(client, leaf) dequant scales (``dist.quantize_int8_stacked``
+        layout). W/C: [K, G] as in ``push`` — W must be built with
+        ``cohort_weights(..., defer_scale=True)`` when the staleness
+        discount participates in normalization, because the effective weight
+        W * 1/(1+staleness)^exponent is applied *here*: on the fly inside
+        the fused kernel for the fusion leaf (the fp32 [K, D, r] stack is
+        never materialized), folded into the [K, G] einsum weights for
+        everything else.
+        """
+        from repro.kernels.cohort_agg import cohort_agg_divergence_quant
+        from repro.kernels.cohort_agg.ref import staleness_discount_ref
+
+        layout = self.layout
+        W = jnp.asarray(W, jnp.float32)
+        C = jnp.asarray(C, jnp.float32)
+        if staleness is None:
+            staleness = jnp.zeros((W.shape[0],), jnp.float32)
+        staleness = jnp.asarray(staleness, jnp.float32)
+        disc = staleness_discount_ref(staleness, exponent)
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(q)
+        scale_leaves = jax.tree.leaves(scales)
+        agg_out, csum_out = [], []
+        sq = jnp.zeros((layout.G,), jnp.float32)
+        for (path, leaf), f in zip(leaves, scale_leaves):
+            p = mdlora.path_str(path)
+            f = jnp.asarray(f, jnp.float32)  # [K] dequant scales
+            if p == layout.fusion_a_path:
+                rg_j = jnp.asarray(layout.row_group_vector(leaf.shape[1]))
+                agg_a, sq_rows, mean_rows, cnt_rows = (
+                    cohort_agg_divergence_quant(
+                        leaf, f, W[:, rg_j], C[:, rg_j], staleness, exponent,
+                        impl=self.impl, interpret=self.interpret,
+                        bd=self.bd))
+                agg_out.append(agg_a)
+                csum_out.append(mean_rows * cnt_rows[:, None])
+                sq = sq.at[rg_j].add(sq_rows)
+            elif p in layout.leaf_axis0_groups:
+                ids = jnp.asarray(layout.leaf_axis0_groups[p])
+                x = leaf.astype(jnp.float32)
+                agg_out.append(jnp.einsum("nl,nl...->l...",
+                                          W[:, ids] * (disc * f)[:, None],
+                                          x))
+                csum_out.append(jnp.einsum("nl,nl...->l...",
+                                           C[:, ids] * f[:, None], x))
+                per_l = jnp.sum(jnp.square(x),
+                                axis=tuple(range(2, x.ndim)))  # [K, L]
+                sq = sq.at[ids].add(jnp.sum(
+                    per_l * C[:, ids] * jnp.square(f)[:, None], axis=0))
+            elif p in layout.leaf_group:
+                g = layout.leaf_group[p]
+                x = leaf.astype(jnp.float32)
+                agg_out.append(jnp.einsum("n,n...->...", W[:, g] * disc * f,
+                                          x))
+                csum_out.append(jnp.einsum("n,n...->...", C[:, g] * f, x))
+                per_n = jnp.sum(jnp.square(x),
+                                axis=tuple(range(1, x.ndim)))  # [K]
+                sq = sq.at[g].add(jnp.sum(per_n * C[:, g] * jnp.square(f)))
+            else:
+                agg_out.append(jnp.zeros(leaf.shape[1:], jnp.float32))
+                csum_out.append(jnp.zeros(leaf.shape[1:], jnp.float32))
+        self._commit(treedef, agg_out, csum_out, sq, C)
 
     def finalize(self) -> tuple[Any, Array, Array]:
         """-> (aggregate tree, per-group divergence [G], cohort counts [G]).

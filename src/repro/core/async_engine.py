@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import dist
 from repro.core import aggregation as AG
 from repro.core import mdlora
 from repro.core.engine import (AllocPlan, FedConfig, _rank_gates, allocate,
@@ -90,7 +91,13 @@ class AsyncFedConfig(FedConfig):
     jitter_sigma: float = 0.0  # lognormal compute-time noise (0 = exact)
     total_updates: int | None = None  # overrides rounds * N when set
     agg_impl: str = "xla"  # cohort-agg reduction: "xla" | "pallas"
-    agg_interpret: bool = True  # Pallas interpret mode (CPU containers)
+    agg_interpret: bool | None = None  # Pallas interpret (None = auto: CPU)
+    # uplink codec: "none" ships fp32 deltas; "int8" quantizes client-side
+    # (dist.quantize_int8 + error feedback) and the server ingests the
+    # compressed payload natively — dequantization and the staleness
+    # discount are fused into the cohort reduction (push_quantized), the
+    # fp32 client stack is never rebuilt, and upload bytes drop 4x.
+    uplink_codec: str = "none"
     # --- vectorized fleet runtime (VectorizedAsyncFedRun) ---
     grad_mode: str = "dispatch"  # dispatch | cohort | none (see module doc)
     snapshot_ring: int = 8  # retained model versions for cohort gradients
@@ -114,13 +121,19 @@ def _make_state(G: int, trainable0: Any, seed: int) -> AsyncFedState:
                          rng=np.random.default_rng(seed))
 
 
-def _check_strategy(strategy: AsyncStrategy) -> None:
+UPLINK_CODECS = ("none", "int8")
+
+
+def _check_strategy(strategy: AsyncStrategy, fed: "AsyncFedConfig") -> None:
     if strategy.personal or strategy.share_only:
         raise ValueError("async runtime keeps one global model; "
                          "personalized strategies are sync-only")
     if strategy.agg not in ("cohort", "fedavg"):
         raise ValueError(f"async runtime supports cohort/fedavg "
                          f"aggregation, not {strategy.agg!r}")
+    if fed.uplink_codec not in UPLINK_CODECS:
+        raise ValueError(f"uplink_codec must be one of {UPLINK_CODECS}, "
+                         f"got {fed.uplink_codec!r}")
 
 
 def _history_init() -> dict:
@@ -153,19 +166,27 @@ class _ServerFlushMixin:
     zero prototypes are derived exactly once per run.
     """
 
+    @property
+    def _uplink_bytes_per_param(self) -> float:
+        """Simulated uplink cost per shipped parameter (int8 = 1 byte)."""
+        return 1.0 if self.fed.uplink_codec == "int8" else 4.0
+
     def _flush_arrays(self, deltas: Any, S: np.ndarray,
                       client_ids: np.ndarray, losses: np.ndarray | None,
                       staleness: np.ndarray) -> dict:
         """Fold one buffered cohort into the global model (one server
-        version). ``deltas``: client-stacked pytree ([K, ...] leaves), rows
-        aligned with ``S``/``client_ids``/``losses``/``staleness`` — all
-        sorted by client id so a full homogeneous buffer reproduces the
+        version). ``deltas``: client-stacked pytree ([K, ...] leaves) or an
+        ``aggregation.QuantizedStack`` (int8 uplink — ingested through the
+        fused ``push_quantized`` path without rebuilding the fp32 stack),
+        rows aligned with ``S``/``client_ids``/``losses``/``staleness`` —
+        all sorted by client id so a full homogeneous buffer reproduces the
         synchronous stack exactly. ``deltas=None`` = system-only flush
         (grad_mode "none"): staleness/energy accounting advances, the model
         and divergence state stay untouched, loss records as NaN."""
         task, fleet, fed = self.task, self.fleet, self.fed
         layout, state = task.layout, self.state
         K = len(client_ids)
+        quant = isinstance(deltas, AG.QuantizedStack)
         staleness = np.asarray(staleness, np.float64)
         fresh = np.ones(K, bool)
         if self.strategy.max_staleness is not None:
@@ -178,16 +199,18 @@ class _ServerFlushMixin:
             a = self.strategy.staleness_exponent
             scale = (None if a == 0.0
                      else AG.staleness_discounts(staleness, a))
+            # quantized ingest applies the discount *inside* the fused
+            # reduction, so keep it out of the numerator (defer_scale)
+            wkw = dict(client_scale=scale, defer_scale=quant)
             if self.strategy.agg == "cohort":
-                W = AG.cohort_weights(layout, trained, mmask,
-                                      client_scale=scale)
+                W = AG.cohort_weights(layout, trained, mmask, **wkw)
             else:  # fedavg: every (fresh) buffered client into every
                 # non-empty group — max_staleness drops apply here too
                 ones = jnp.asarray(
                     np.tile(layout.sizes[None, :] > 0, (K, 1))
                     & fresh[:, None], jnp.float32)
                 W = AG.cohort_weights(layout, ones, jnp.ones_like(mmask),
-                                      client_scale=scale)
+                                      **wkw)
 
             # divergence cohort: possession AND trained (paper Eq. 5 on the
             # buffered subset)
@@ -195,7 +218,12 @@ class _ServerFlushMixin:
             C = jnp.asarray(acc & (S > 0), jnp.float32)
 
             self.aggbuf.reset()
-            self.aggbuf.push(deltas, W, C)
+            if quant:
+                self.aggbuf.push_quantized(
+                    deltas.q, deltas.scales, W, C,
+                    jnp.asarray(staleness, jnp.float32), a)
+            else:
+                self.aggbuf.push(deltas, W, C)
             agg_tree, d, cnt = self.aggbuf.finalize()
 
             state.trainable = jax.tree.map(
@@ -207,8 +235,15 @@ class _ServerFlushMixin:
             touched = np.asarray(cnt) > 0
             state.dbar[touched] = (fed.gamma * d_np
                                    + (1.0 - fed.gamma) * state.dbar)[touched]
+            if quant:  # magnitude EMA diagnostic over the K-client buffer
+                # (dequantizes [K, ...] for stats only — the hot reduction
+                # above never materialized it)
+                norm_src = dist.dequantize_int8_stacked(deltas.q,
+                                                        deltas.scales)
+            else:
+                norm_src = deltas
             per_client_norms = np.asarray(jax.vmap(
-                lambda t: mdlora.group_norms(layout, t))(deltas))
+                lambda t: mdlora.group_norms(layout, t))(norm_src))
             denom = np.maximum(S.sum(0), 1)
             mag = (per_client_norms * S).sum(0) / denom
             sel = S.any(0)
@@ -265,11 +300,15 @@ class AsyncFedRun(_ServerFlushMixin):
     history: dict
     aggbuf: AG.CohortAggBuffer
     proto: Any  # trainable prototype (explicit, not an id()-keyed cache)
+    # client-side error-feedback residuals (uplink_codec="int8"): the
+    # quantization error stays on the device and is added to its next
+    # update, so the compressed stream telescopes to the uncompressed one
+    ef: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
     def create(cls, task: MMTask, trainable0: Any, strategy: AsyncStrategy,
                fleet: FleetConfig, fed: AsyncFedConfig) -> "AsyncFedRun":
-        _check_strategy(strategy)
+        _check_strategy(strategy, fed)
         state = _make_state(task.layout.G, trainable0, fed.seed)
         trace = AsyncTrace()
         trace.init_fleet(fleet.N)
@@ -317,15 +356,22 @@ class AsyncFedRun(_ServerFlushMixin):
             trained_fl = (np.asarray(S, np.float64) @ layout.flops
                           ) * examples * 2.0
             fixed_fl = np.full(K, task.forward_flops_per_example() * examples)
-        upload = (np.asarray(S, np.float64) @ layout.sizes) * 4.0
+        upload = ((np.asarray(S, np.float64) @ layout.sizes)
+                  * self._uplink_bytes_per_param)
         dur, t_comp, t_comm = completion_times(
             fleet, clients, trained_fl, fixed_fl, upload, fed.t_overhead,
             fed.utilization, self.fed.jitter_sigma, state.rng)
 
+        quantize = fed.uplink_codec == "int8"
         losses_np = np.asarray(losses)
         for i, c in enumerate(clients):
-            pend = _Pending(int(c), state.round,
-                            jax.tree.map(lambda x: x[i], deltas),
+            d_i = jax.tree.map(lambda x, i=i: x[i], deltas)
+            if quantize:  # client-side compression, EF residual stays local
+                q_i, s_i, resid = dist.quantize_int8_ef(
+                    d_i, self.ef.get(int(c)))
+                self.ef[int(c)] = resid
+                d_i = (q_i, s_i)
+            pend = _Pending(int(c), state.round, d_i,
                             float(losses_np[i]), S[i], float(t_comp[i]),
                             float(t_comm[i]), float(upload[i]))
             self.queue.push(now + dur[i], int(c), payload=pend)
@@ -337,8 +383,15 @@ class AsyncFedRun(_ServerFlushMixin):
         global model through the shared ``_flush_arrays``."""
         entries = sorted(self.buffer, key=lambda e: e.client)
         self.buffer = []
-        deltas = jax.tree.map(lambda *xs: jnp.stack(xs),
-                              *[e.delta for e in entries])
+        if self.fed.uplink_codec == "int8":
+            deltas = AG.QuantizedStack(
+                jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[e.delta[0] for e in entries]),
+                jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[e.delta[1] for e in entries]))
+        else:
+            deltas = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[e.delta for e in entries])
         S = np.stack([e.S_row for e in entries])  # [K, G]
         client_ids = np.array([e.client for e in entries])
         staleness = np.array([self.state.round - e.version for e in entries],
@@ -431,10 +484,16 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         self._buf_ticket: list[np.ndarray] = []
         self._buf_loss: list[np.ndarray] = []
         self._buf_deltas: list[Any] = []
+        self._buf_scales: list[Any] = []  # uplink_codec="int8" only
         self._buf_count = 0
-        # dispatch-mode in-flight gradient store ([N, ...] stacked leaves)
+        # dispatch-mode in-flight gradient store ([N, ...] stacked leaves);
+        # with uplink_codec="int8" the leaves are int8 (4x less memory),
+        # `_pend_scales` holds the [N] per-leaf dequant scales and `_ef`
+        # the fp32 [N, ...] client-side error-feedback residuals
         self._pend_deltas: Any = None
         self._pend_loss: np.ndarray | None = None
+        self._pend_scales: Any = None
+        self._ef: Any = None
         # cohort-mode ring of the last `snapshot_ring` model versions
         self._ring: Any = None
         if fed.grad_mode == "cohort":
@@ -448,7 +507,7 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
     def create(cls, task: MMTask, trainable0: Any, strategy: AsyncStrategy,
                fleet: FleetConfig, fed: AsyncFedConfig
                ) -> "VectorizedAsyncFedRun":
-        _check_strategy(strategy)
+        _check_strategy(strategy, fed)
         if fed.grad_mode not in GRAD_MODES:
             raise ValueError(f"grad_mode must be one of {GRAD_MODES}, "
                              f"got {fed.grad_mode!r}")
@@ -505,15 +564,36 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
             deltas, losses = self.local_update(
                 start, batches, mmasks, gates, self._rank_gate_rows(B),
                 fed.lr)
+            quantize = fed.uplink_codec == "int8"
             if self._pend_deltas is None:
+                store_dtype = jnp.int8 if quantize else jnp.float32
                 self._pend_deltas = jax.tree.map(
-                    lambda x: jnp.zeros((fleet.N,) + x.shape, jnp.float32),
+                    lambda x: jnp.zeros((fleet.N,) + x.shape, store_dtype),
                     self.proto)
                 self._pend_loss = np.full(fleet.N, np.nan)
+                if quantize:
+                    self._pend_scales = jax.tree.map(
+                        lambda x: jnp.zeros((fleet.N,), jnp.float32),
+                        self.proto)
+                    self._ef = jax.tree.map(
+                        lambda x: jnp.zeros((fleet.N,) + x.shape,
+                                            jnp.float32), self.proto)
             jidx = jnp.asarray(idx)
-            self._pend_deltas = jax.tree.map(
-                lambda buf, d: buf.at[jidx].set(d), self._pend_deltas,
-                deltas)
+            if quantize:  # compress client-side, EF residual stays per-row
+                q, s, resid = dist.quantize_int8_stacked(
+                    deltas, jax.tree.map(lambda r: r[jidx], self._ef))
+                self._pend_deltas = jax.tree.map(
+                    lambda buf, v: buf.at[jidx].set(v), self._pend_deltas,
+                    q)
+                self._pend_scales = jax.tree.map(
+                    lambda buf, v: buf.at[jidx].set(v), self._pend_scales,
+                    s)
+                self._ef = jax.tree.map(
+                    lambda buf, v: buf.at[jidx].set(v), self._ef, resid)
+            else:
+                self._pend_deltas = jax.tree.map(
+                    lambda buf, d: buf.at[jidx].set(d), self._pend_deltas,
+                    deltas)
             self._pend_loss[idx] = np.asarray(losses)
 
         examples = steps * fed.batch_size
@@ -525,7 +605,8 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
             trained_fl = (np.asarray(S, np.float64) @ layout.flops
                           ) * examples * 2.0
             fixed_fl = np.full(B, task.forward_flops_per_example() * examples)
-        upload = (np.asarray(S, np.float64) @ layout.sizes) * 4.0
+        upload = ((np.asarray(S, np.float64) @ layout.sizes)
+                  * self._uplink_bytes_per_param)
         dur, t_comp, t_comm = T.cycle_times(
             fleet, idx, trained_fl, fixed_fl, upload, fed.t_overhead,
             fed.utilization, fed.jitter_sigma, state.rng)
@@ -545,6 +626,9 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
             jc = jnp.asarray(chunk)
             self._buf_deltas.append(
                 jax.tree.map(lambda x: x[jc], self._pend_deltas))
+            if self._pend_scales is not None:
+                self._buf_scales.append(
+                    jax.tree.map(lambda x: x[jc], self._pend_scales))
         self._buf_count += len(chunk)
 
     def _cohort_update(self, dataset, ids: np.ndarray, versions: np.ndarray,
@@ -588,19 +672,31 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         S = unpack_group_bits(np.concatenate(self._buf_bits)[order],
                               self.task.layout.G)
         staleness = (self.state.round - versions).astype(np.float64)
+        quantize = self.fed.uplink_codec == "int8"
         if self.grad_mode == "dispatch":
             losses = np.concatenate(self._buf_loss)[order]
             deltas = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
                                   *self._buf_deltas)
             jorder = jnp.asarray(order)
             deltas = jax.tree.map(lambda x: x[jorder], deltas)
+            if quantize:  # buffered rows are already the int8 uplink
+                scales = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                      *self._buf_scales)
+                deltas = AG.QuantizedStack(
+                    deltas, jax.tree.map(lambda x: x[jorder], scales))
         elif self.grad_mode == "cohort":
             deltas, losses = self._cohort_update(dataset, ids, versions,
                                                  tickets, S)
+            if quantize:  # cohort-sampled gradients quantize at the edge
+                # of the simulated uplink (no EF: each (client, ticket)
+                # update is drawn exactly once at flush time)
+                qt, sc, _ = dist.quantize_int8_stacked(deltas)
+                deltas = AG.QuantizedStack(qt, sc)
         else:
             deltas, losses = None, None
         for buf in (self._buf_client, self._buf_version, self._buf_bits,
-                    self._buf_ticket, self._buf_loss, self._buf_deltas):
+                    self._buf_ticket, self._buf_loss, self._buf_deltas,
+                    self._buf_scales):
             buf.clear()
         self._buf_count = 0
 

@@ -18,12 +18,8 @@ import jax.numpy as jnp
 
 def quantize_int8(tree: Any) -> tuple[Any, Any]:
     """Per-leaf symmetric int8: scale = max|x|/127, q = round(x/scale)."""
-    def q(x):
-        x32 = x.astype(jnp.float32)
-        scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
-        return jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8), scale
-
-    pairs = jax.tree.map(q, tree)
+    pairs = jax.tree.map(lambda x: _quantize_leaf(x.astype(jnp.float32)),
+                         tree)
     qt = jax.tree.map(lambda p: p[0], pairs,
                       is_leaf=lambda x: isinstance(x, tuple))
     sc = jax.tree.map(lambda p: p[1], pairs,
@@ -33,6 +29,70 @@ def quantize_int8(tree: Any) -> tuple[Any, Any]:
 
 def dequantize_int8(qtree: Any, scales: Any) -> Any:
     return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qtree, scales)
+
+
+def _quantize_leaf(x32):
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_int8_ef(tree: Any, error: Any | None = None
+                     ) -> tuple[Any, Any, Any]:
+    """Int8 quantization with error feedback (client-side state).
+
+    Quantizes ``tree + error`` and returns ``(qtree, scales, residual)``
+    where residual = (tree + error) - dequant(qtree) is the next round's
+    ``error``. Summed over rounds, the dequantized uploads telescope to the
+    uncompressed stream minus the final residual, so the compressed uplink
+    is unbiased in the limit (same contract as ``topk_sparsify``).
+    """
+    if error is None:
+        error = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tree)
+
+    def q(x, e):
+        x32 = x.astype(jnp.float32) + e
+        qv, scale = _quantize_leaf(x32)
+        return qv, scale, x32 - qv.astype(jnp.float32) * scale
+
+    triples = jax.tree.map(q, tree, error)
+    is_t = lambda x: isinstance(x, tuple)  # noqa: E731
+    return tuple(jax.tree.map(lambda p, i=i: p[i], triples, is_leaf=is_t)
+                 for i in range(3))
+
+
+def quantize_int8_stacked(tree: Any, error: Any | None = None
+                          ) -> tuple[Any, Any, Any]:
+    """Per-client int8 for client-stacked trees ([K, ...] leaves).
+
+    One symmetric scale per (client, leaf) — scales leaves are [K] — so a
+    whole dispatch batch quantizes in one vectorized shot; this is the
+    uplink layout ``CohortAggBuffer.push_quantized`` ingests natively.
+    ``error`` ([K, ...] residual stack) carries per-client error feedback.
+    Returns ``(qtree, scales, residual)`` like ``quantize_int8_ef``.
+    """
+    def q(x, e):
+        x32 = x.astype(jnp.float32) + (0.0 if e is None else e)
+        red = tuple(range(1, x32.ndim))
+        scale = jnp.maximum(jnp.max(jnp.abs(x32), axis=red), 1e-12) / 127.0
+        sb = scale.reshape((-1,) + (1,) * (x32.ndim - 1))
+        qv = jnp.clip(jnp.round(x32 / sb), -127, 127).astype(jnp.int8)
+        return qv, scale, x32 - qv.astype(jnp.float32) * sb
+
+    if error is None:
+        triples = jax.tree.map(lambda x: q(x, None), tree)
+    else:
+        triples = jax.tree.map(q, tree, error)
+    is_t = lambda x: isinstance(x, tuple)  # noqa: E731
+    return tuple(jax.tree.map(lambda p, i=i: p[i], triples, is_leaf=is_t)
+                 for i in range(3))
+
+
+def dequantize_int8_stacked(qtree: Any, scales: Any) -> Any:
+    """Inverse of ``quantize_int8_stacked`` ([K] scale leaves broadcast)."""
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32)
+        * s.reshape((-1,) + (1,) * (q.ndim - 1)), qtree, scales)
 
 
 def topk_sparsify(tree: Any, frac: float, error: Any | None = None

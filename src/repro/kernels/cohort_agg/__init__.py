@@ -1,1 +1,4 @@
-from repro.kernels.cohort_agg.ops import cohort_agg_divergence
+from repro.kernels.cohort_agg.ops import (cohort_agg_divergence,
+                                          cohort_agg_divergence_quant)
+
+__all__ = ["cohort_agg_divergence", "cohort_agg_divergence_quant"]

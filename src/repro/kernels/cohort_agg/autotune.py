@@ -1,0 +1,109 @@
+"""Block-size selection for the cohort-agg kernels.
+
+The kernel tiles the row dimension D of the fusion leaf into ``bd``-row
+blocks; N streams innermost so the four accumulators stay VMEM-resident.
+The right ``bd`` balances per-step DMA size against grid overhead and is
+shape- and backend-dependent, so instead of the historical hardcoded 256
+the wrappers resolve ``bd=None`` here, once per shape (process-cached):
+
+* interpret mode / XLA impl: timing is meaningless (interpret) or unused
+  (the einsum oracle ignores ``bd``), so take the largest divisor of D
+  within the VMEM accumulator budget — the fewest-launches heuristic.
+* compiled Pallas (real TPU/GPU backend): run a bench_roofline.py-style
+  sweep over the candidate cells on dummy data and keep the fastest
+  (median of ``_SWEEP_REPS`` timed reps after a compile warm-up).
+
+``largest_divisor`` is also the one-stop fix for non-divisible shapes: any
+requested ``bd`` is snapped down to the largest divisor of D that does not
+exceed it, so blocking never silently degenerates to a single D-row tile.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# power-of-two cells the sweep considers (snapped to divisors of D)
+_CANDIDATE_CAPS = (64, 128, 256, 512)
+_SWEEP_REPS = 3
+# accumulators are 2*(bd*r + bd) f32 plus the streamed (bd, r) input tile;
+# stay well under the ~16 MB/core VMEM so double buffering has headroom
+_VMEM_ACC_BUDGET = 4 * 2**20
+
+_CACHE: dict[tuple, int] = {}
+
+
+def largest_divisor(D: int, cap: int) -> int:
+    """Largest divisor of D that is <= cap (>= 1)."""
+    b = max(1, min(int(cap), int(D)))
+    while D % b:
+        b -= 1
+    return b
+
+
+def candidate_bds(D: int, r: int) -> list[int]:
+    """Distinct, VMEM-feasible candidate block sizes for row dimension D."""
+    cands = set()
+    for cap in _CANDIDATE_CAPS:
+        bd = largest_divisor(D, cap)
+        if 4 * (2 * bd * (r + 1) + bd * r) <= _VMEM_ACC_BUDGET:
+            cands.add(bd)
+    return sorted(cands) or [1]
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def select_block_size(shape: tuple[int, int, int], impl: str = "pallas",
+                      interpret: bool = True, quant: bool = False) -> int:
+    """Resolve ``bd`` for a [N, D, r] reduction (cached per shape/backend)."""
+    N, D, r = (int(x) for x in shape)
+    key = (N, D, r, impl, bool(interpret), bool(quant),
+           jax.default_backend())
+    if key not in _CACHE:
+        cands = candidate_bds(D, r)
+        if impl != "pallas" or interpret or len(cands) == 1:
+            _CACHE[key] = cands[-1]
+        else:
+            _CACHE[key] = _timed_select(N, D, r, cands, quant)
+    return _CACHE[key]
+
+
+def _timed_select(N: int, D: int, r: int, cands: list[int],
+                  quant: bool) -> int:
+    from repro.kernels.cohort_agg.kernel import (
+        cohort_agg_divergence_pallas, cohort_agg_divergence_quant_pallas)
+
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.random((N, D)), jnp.float32)
+    C = jnp.asarray(rng.random((N, D)) < 0.5, jnp.float32)
+    if quant:
+        q = jnp.asarray(rng.integers(-127, 128, (N, D, r)), jnp.int8)
+        s = jnp.asarray(rng.random((N,)) * 1e-2, jnp.float32)
+        t = jnp.asarray(rng.integers(0, 4, (N,)), jnp.float32)
+
+        def run(bd):
+            return cohort_agg_divergence_quant_pallas(
+                q, s, W, C, t, 0.5, bd=bd, interpret=False)
+    else:
+        deltas = jnp.asarray(rng.normal(size=(N, D, r)), jnp.float32)
+
+        def run(bd):
+            return cohort_agg_divergence_pallas(deltas, W, C, bd=bd,
+                                                interpret=False)
+
+    best, best_t = cands[-1], float("inf")
+    for bd in cands:
+        jax.block_until_ready(run(bd))  # compile warm-up
+        ts = []
+        for _ in range(_SWEEP_REPS):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(bd))
+            ts.append(time.perf_counter() - t0)
+        med = sorted(ts)[len(ts) // 2]
+        if med < best_t:
+            best, best_t = bd, med
+    return best

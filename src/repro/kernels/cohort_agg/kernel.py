@@ -47,6 +47,28 @@ def _kernel(d_ref, w_ref, c_ref, agg_ref, sq_ref, mean_ref, cnt_ref,
         cnt_ref[...] = cnt
 
 
+def _row_out_specs_scratch(D: int, bd: int, r: int):
+    out_specs = [
+        pl.BlockSpec((bd, r), lambda d, n: (d, 0)),
+        pl.BlockSpec((bd,), lambda d, n: (d,)),
+        pl.BlockSpec((bd, r), lambda d, n: (d, 0)),
+        pl.BlockSpec((bd,), lambda d, n: (d,)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((D, r), jnp.float32),
+        jax.ShapeDtypeStruct((D,), jnp.float32),
+        jax.ShapeDtypeStruct((D, r), jnp.float32),
+        jax.ShapeDtypeStruct((D,), jnp.float32),
+    ]
+    scratch = [
+        pltpu.VMEM((bd, r), jnp.float32),
+        pltpu.VMEM((bd,), jnp.float32),
+        pltpu.VMEM((bd, r), jnp.float32),
+        pltpu.VMEM((bd,), jnp.float32),
+    ]
+    return out_specs, out_shape, scratch
+
+
 def cohort_agg_divergence_pallas(deltas, W, C, bd: int = 256,
                                  interpret: bool = False):
     N, D, r = deltas.shape
@@ -54,6 +76,7 @@ def cohort_agg_divergence_pallas(deltas, W, C, bd: int = 256,
     assert D % bd == 0, (D, bd)
     grid = (D // bd, N)
     kernel = functools.partial(_kernel, n_clients=N)
+    out_specs, out_shape, scratch = _row_out_specs_scratch(D, bd, r)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -62,23 +85,73 @@ def cohort_agg_divergence_pallas(deltas, W, C, bd: int = 256,
             pl.BlockSpec((1, bd), lambda d, n: (n, d)),
             pl.BlockSpec((1, bd), lambda d, n: (n, d)),
         ],
-        out_specs=[
-            pl.BlockSpec((bd, r), lambda d, n: (d, 0)),
-            pl.BlockSpec((bd,), lambda d, n: (d,)),
-            pl.BlockSpec((bd, r), lambda d, n: (d, 0)),
-            pl.BlockSpec((bd,), lambda d, n: (d,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((D, r), jnp.float32),
-            jax.ShapeDtypeStruct((D,), jnp.float32),
-            jax.ShapeDtypeStruct((D, r), jnp.float32),
-            jax.ShapeDtypeStruct((D,), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((bd, r), jnp.float32),
-            pltpu.VMEM((bd,), jnp.float32),
-            pltpu.VMEM((bd, r), jnp.float32),
-            pltpu.VMEM((bd,), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
     )(deltas, W, C)
+
+
+def _quant_kernel(q_ref, s_ref, w_ref, c_ref, t_ref, agg_ref, sq_ref,
+                  mean_ref, cnt_ref, acc_agg, acc_sq, acc_mean, acc_cnt,
+                  *, n_clients: int, exponent: float):
+    """Quantized-ingest variant: the int8 tile is dequantized in VMEM and
+    the FedBuff staleness discount folded into the combine weight, in the
+    same accumulation — the fp32 client stack never exists in HBM."""
+    n_idx = pl.program_id(1)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        acc_agg[...] = jnp.zeros_like(acc_agg)
+        acc_sq[...] = jnp.zeros_like(acc_sq)
+        acc_mean[...] = jnp.zeros_like(acc_mean)
+        acc_cnt[...] = jnp.zeros_like(acc_cnt)
+
+    d = q_ref[0].astype(jnp.float32) * s_ref[0]  # dequantized [bd, r] tile
+    if exponent == 0.0:
+        w = w_ref[0]
+    else:  # w_eff = W * 1/(1+s)^a, per-client scalar
+        w = w_ref[0] * jnp.power(1.0 + t_ref[0], -exponent)
+    c = c_ref[0]
+    acc_agg[...] += d * w[:, None]
+    acc_sq[...] += c * jnp.sum(jnp.square(d), axis=1)
+    acc_mean[...] += d * c[:, None]
+    acc_cnt[...] += c
+
+    @pl.when(n_idx == n_clients - 1)
+    def _finish():
+        agg_ref[...] = acc_agg[...]
+        sq_ref[...] = acc_sq[...]
+        cnt = acc_cnt[...]
+        mean_ref[...] = acc_mean[...] / jnp.maximum(cnt, 1.0)[:, None]
+        cnt_ref[...] = cnt
+
+
+def cohort_agg_divergence_quant_pallas(q, scales, W, C, staleness,
+                                       exponent: float, bd: int = 256,
+                                       interpret: bool = False):
+    """q [N, D, r] int8, scales [N] per-(client, leaf) dequant scales,
+    W/C [N, D], staleness [N] -> same outputs as the fp32 kernel for
+    effective deltas q*scale and effective weights W/(1+staleness)^a."""
+    N, D, r = q.shape
+    bd = min(bd, D)
+    assert D % bd == 0, (D, bd)
+    grid = (D // bd, N)
+    kernel = functools.partial(_quant_kernel, n_clients=N,
+                               exponent=float(exponent))
+    out_specs, out_shape, scratch = _row_out_specs_scratch(D, bd, r)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd, r), lambda d, n: (n, d, 0)),
+            pl.BlockSpec((1,), lambda d, n: (n,)),
+            pl.BlockSpec((1, bd), lambda d, n: (n, d)),
+            pl.BlockSpec((1, bd), lambda d, n: (n, d)),
+            pl.BlockSpec((1,), lambda d, n: (n,)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, scales.astype(jnp.float32), W, C, staleness.astype(jnp.float32))

@@ -31,6 +31,38 @@ def cohort_agg_divergence_ref(deltas, W, C):
     return agg, sqsum, mean, cnt
 
 
+def staleness_discount_ref(staleness, exponent: float):
+    """FedBuff polynomial discount 1/(1+s)^a (a == 0 -> all-ones)."""
+    s = jnp.asarray(staleness, jnp.float32)
+    if exponent == 0.0:
+        return jnp.ones_like(s)
+    return jnp.power(1.0 + s, -exponent)
+
+
+def cohort_agg_divergence_quant_ref(q, scales, W, C, staleness,
+                                    exponent: float):
+    """Oracle for the fused quantized-ingest pass.
+
+    Mathematically ``cohort_agg_divergence_ref(q * scales, W * disc, C)``
+    with disc = 1/(1+staleness)^a — but written with the per-client scalars
+    folded into the [N, D] weights so no fp32 [N, D, r] stack is named (XLA
+    keeps the int8->f32 convert inside the fused reduction).
+    """
+    q32 = q.astype(jnp.float32)
+    s = scales.astype(jnp.float32)
+    c = C.astype(jnp.float32)
+    w_eff = W.astype(jnp.float32) * (staleness_discount_ref(staleness,
+                                                            exponent)
+                                     * s)[:, None]
+    agg = jnp.einsum("nd,ndr->dr", w_eff, q32)
+    sqsum = jnp.einsum("nd,ndr->d", c * jnp.square(s)[:, None],
+                       jnp.square(q32))
+    cnt = jnp.sum(c, axis=0)
+    mean = (jnp.einsum("nd,ndr->dr", c * s[:, None], q32)
+            / jnp.maximum(cnt, 1.0)[:, None])
+    return agg, sqsum, mean, cnt
+
+
 def divergence_from_stats(sqsum, mean, cnt, row_block_ids, n_blocks: int):
     """Reduce row stats to per-block divergences (Eq. 5)."""
     per_row = jnp.where(cnt > 0, sqsum / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,25 @@
+"""Backend detection shared by the kernel wrappers.
+
+Every Pallas kernel in this repo has an ``interpret`` switch. Interpret mode
+is correct everywhere but orders of magnitude slower than a compiled kernel —
+it exists so the CPU-only CI container can exercise the kernel code paths.
+The rule is one line: interpret exactly when the active JAX backend has no
+Mosaic/Triton lowering (i.e. CPU). Callers pass ``interpret=None`` to get
+that default and only override it in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.cache
+def default_interpret() -> bool:
+    """True iff the active backend needs Pallas interpret mode (CPU)."""
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> backend default; explicit bools pass through."""
+    return default_interpret() if interpret is None else bool(interpret)

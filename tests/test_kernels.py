@@ -96,6 +96,119 @@ def test_cohort_agg_divergence_reduction_matches_eq5():
         np.testing.assert_allclose(float(d[blk]), want, rtol=1e-4)
 
 
+def _quant_inputs(N, D, r):
+    q = jnp.asarray(KEY.integers(-127, 128, (N, D, r)), jnp.int8)
+    scales = jnp.asarray(KEY.uniform(1e-3, 1e-1, N), jnp.float32)
+    W = jnp.asarray(KEY.random((N, D)) * (KEY.random((N, D)) < 0.7),
+                    jnp.float32)
+    C = jnp.asarray(KEY.random((N, D)) < 0.6, jnp.float32)
+    staleness = jnp.asarray(KEY.integers(0, 6, N), jnp.float32)
+    return q, scales, W, C, staleness
+
+
+def _unfused_oracle(q, scales, W, C, staleness, exponent):
+    """Materialize the fp32 stack, discount the weights, aggregate."""
+    from repro.kernels.cohort_agg.ops import cohort_agg_divergence
+
+    deltas = q.astype(jnp.float32) * scales[:, None, None]
+    W_eff = W * jnp.power(1.0 + staleness, -exponent)[:, None]
+    return cohort_agg_divergence(deltas, W_eff, C, impl="xla")
+
+
+@pytest.mark.parametrize("N,D,r", [(4, 64, 4), (9, 96, 8), (16, 100, 1)])
+@pytest.mark.parametrize("exponent", [0.0, 0.5])
+def test_cohort_agg_quant_matches_unfused(N, D, r, exponent):
+    """Fused int8 ingest == dequantize -> discount -> aggregate, for both
+    impls, including non-divisible D (96, 100 vs default block caps)."""
+    from repro.kernels.cohort_agg.ops import cohort_agg_divergence_quant
+
+    q, scales, W, C, staleness = _quant_inputs(N, D, r)
+    want = _unfused_oracle(q, scales, W, C, staleness, exponent)
+    for impl in ("xla", "pallas"):
+        got = cohort_agg_divergence_quant(q, scales, W, C, staleness,
+                                          exponent=exponent, impl=impl,
+                                          interpret=True)
+        for a, b in zip(want, got):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=1e-4, atol=1e-4)
+
+
+def test_cohort_agg_quant_empty_cohort():
+    """All-zero W and C (nobody trained / nobody in cohort) stays finite."""
+    from repro.kernels.cohort_agg.ops import cohort_agg_divergence_quant
+
+    N, D, r = 5, 64, 4
+    q, scales, _, _, staleness = _quant_inputs(N, D, r)
+    Z = jnp.zeros((N, D), jnp.float32)
+    for impl in ("xla", "pallas"):
+        agg, sq, mean, cnt = cohort_agg_divergence_quant(
+            q, scales, Z, Z, staleness, exponent=0.5, impl=impl,
+            interpret=True)
+        for x in (agg, sq, mean, cnt):
+            assert np.isfinite(np.asarray(x)).all()
+        np.testing.assert_array_equal(np.asarray(agg), 0.0)
+        np.testing.assert_array_equal(np.asarray(cnt), 0.0)
+
+
+def test_cohort_agg_explicit_bd_snaps_to_divisor():
+    """bd larger than (or not dividing) D must snap, not silently misindex."""
+    from repro.kernels.cohort_agg.ops import cohort_agg_divergence
+
+    N, D, r = 6, 96, 4
+    deltas = randn((N, D, r))
+    W = jnp.asarray(KEY.random((N, D)), jnp.float32)
+    C = jnp.asarray(KEY.random((N, D)) < 0.5, jnp.float32)
+    ref = cohort_agg_divergence(deltas, W, C, impl="xla")
+    for bd in (256, 64, 7):  # snap to 96, 48, 6
+        got = cohort_agg_divergence(deltas, W, C, impl="pallas",
+                                    interpret=True, bd=bd)
+        for a, b in zip(ref, got):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       atol=1e-4)
+
+
+def test_cohort_agg_autotune_candidates():
+    from repro.kernels.cohort_agg import autotune
+
+    assert autotune.largest_divisor(96, 64) == 48
+    assert autotune.largest_divisor(100, 256) == 100
+    assert autotune.largest_divisor(97, 64) == 1  # prime > cap
+    for D in (96, 100, 256, 4096):
+        cands = autotune.candidate_bds(D, r=4)
+        assert cands and all(D % bd == 0 for bd in cands)
+    bd = autotune.select_block_size((8, 256, 4), impl="pallas",
+                                    interpret=True, quant=False)
+    assert 256 % bd == 0
+    # second call hits the process-level cache (same key -> same choice)
+    assert autotune.select_block_size((8, 256, 4), impl="pallas",
+                                      interpret=True, quant=False) == bd
+
+
+def test_cohort_agg_default_interpret_tracks_backend():
+    """interpret=None must resolve to interpret-mode only on CPU, so
+    impl='pallas' is safe by default everywhere."""
+    from repro.kernels.runtime import default_interpret, resolve_interpret
+
+    on_cpu = jax.default_backend() == "cpu"
+    assert default_interpret() is on_cpu
+    assert resolve_interpret(None) is on_cpu
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+@pytest.mark.skipif(jax.default_backend() == "cpu",
+                    reason="needs a compiled pallas backend (TPU/GPU)")
+def test_cohort_agg_quant_lowers_compiled():
+    """Smoke: the quant kernel compiles non-interpreted off-CPU."""
+    from repro.kernels.cohort_agg.ops import cohort_agg_divergence_quant
+
+    q, scales, W, C, staleness = _quant_inputs(8, 256, 4)
+    out = cohort_agg_divergence_quant(q, scales, W, C, staleness,
+                                      exponent=0.5, impl="pallas",
+                                      interpret=None)
+    assert np.isfinite(np.asarray(out[0])).all()
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

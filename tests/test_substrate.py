@@ -158,6 +158,89 @@ def test_compressed_size_accounting():
     assert compressed_size_bytes(tree, "topk", 0.1) == 80
 
 
+def test_compressed_size_matches_actual_payload_bytes():
+    """The comm-simulator accounting equals the bytes a real int8 payload
+    occupies: q.nbytes per leaf + one fp32 scale per leaf."""
+    from repro.dist import compressed_size_bytes, quantize_int8
+
+    rng = np.random.default_rng(3)
+    tree = {"a": jnp.asarray(rng.normal(size=(17, 5)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}}
+    qt, sc = quantize_int8(tree)
+    actual = sum(np.asarray(q).nbytes for q in jax.tree.leaves(qt)) + \
+        sum(np.asarray(s).nbytes for s in jax.tree.leaves(sc))
+    assert compressed_size_bytes(tree, "int8") == actual
+    assert compressed_size_bytes(tree, "none") == \
+        sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 10**6))
+def test_int8_error_feedback_telescopes(seed):
+    """Over T rounds, sum(dequantized uploads) + final residual ==
+    sum(raw updates): the EF stream is unbiased up to the carried residual."""
+    from repro.dist import dequantize_int8, quantize_int8_ef
+
+    rng = np.random.default_rng(seed)
+    T = 6
+    updates = [{"w": jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)}
+               for _ in range(T)]
+    err = None
+    shipped = jnp.zeros((16, 4))
+    for u in updates:
+        qt, sc, err = quantize_int8_ef(u, err)
+        shipped = shipped + dequantize_int8(qt, sc)["w"]
+    total = sum(np.asarray(u["w"]) for u in updates)
+    np.testing.assert_allclose(np.asarray(shipped + err["w"]), total,
+                               rtol=1e-4, atol=1e-5)
+    # the carried residual itself stays bounded by one quantization step
+    assert float(jnp.max(jnp.abs(err["w"]))) <= float(sc["w"]) * 0.5 + 1e-7
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 10**6))
+def test_int8_stacked_matches_per_client(seed):
+    """Stacked per-client quantization == quantizing each client's slice
+    separately (scales leaves are [K], one symmetric scale per client)."""
+    from repro.dist import (dequantize_int8_stacked, quantize_int8,
+                            quantize_int8_stacked)
+
+    rng = np.random.default_rng(seed)
+    K = 4
+    stack = {"w": jnp.asarray(rng.normal(size=(K, 6, 3)), jnp.float32)}
+    qt, sc, resid = quantize_int8_stacked(stack)
+    assert qt["w"].dtype == jnp.int8 and sc["w"].shape == (K,)
+    for k in range(K):
+        qk, sk = quantize_int8({"w": stack["w"][k]})
+        np.testing.assert_array_equal(np.asarray(qt["w"][k]),
+                                      np.asarray(qk["w"]))
+        np.testing.assert_allclose(float(sc["w"][k]), float(sk["w"]),
+                                   rtol=1e-6)
+    # residual is exactly the round-trip error
+    back = dequantize_int8_stacked(qt, sc)
+    np.testing.assert_allclose(np.asarray(resid["w"]),
+                               np.asarray(stack["w"] - back["w"]),
+                               atol=1e-7)
+
+
+def test_topk_error_feedback_telescopes_over_rounds():
+    """Same telescoping contract for the top-k codec across many rounds."""
+    from repro.dist import topk_sparsify
+
+    rng = np.random.default_rng(0)
+    T = 8
+    updates = [{"w": jnp.asarray(rng.normal(size=(32,)), jnp.float32)}
+               for _ in range(T)]
+    err = None
+    shipped = jnp.zeros(32)
+    for u in updates:
+        sparse, err = topk_sparsify(u, frac=0.25, error=err)
+        shipped = shipped + sparse["w"]
+    total = sum(np.asarray(u["w"]) for u in updates)
+    np.testing.assert_allclose(np.asarray(shipped + err["w"]), total,
+                               rtol=1e-4, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # data
 # ---------------------------------------------------------------------------
