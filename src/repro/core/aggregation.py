@@ -85,6 +85,172 @@ def aggregate(layout: mdlora.GroupLayout, global_trainable: Any,
 
 
 # ---------------------------------------------------------------------------
+# Byzantine-robust within-cohort reducers
+# ---------------------------------------------------------------------------
+#
+# RELIEF's cohort interface (Eq. 3) makes rare-modality cohorts small by
+# construction, so one corrupted client can dominate a whole modality block.
+# These reducers replace the weighted mean with bounded-breakdown location
+# estimates computed *within each group's cohort* (membership = W > 0, the
+# trained+fresh clients of cohort_weights): beta-trimmed weighted mean,
+# coordinate-wise median, and blockwise Krum. Divergence statistics (Eq. 5)
+# are unchanged — only the aggregate is robustified.
+
+ROBUST_AGGREGATORS = ("mean", "trimmed", "median", "krum")
+
+
+def trimmed_mean(x: Array, w: Array, trim_frac: float) -> Array:
+    """Coordinate-wise beta-trimmed weighted mean along axis 0.
+
+    x: [K, ...] values; w: non-negative weights broadcastable to x — w > 0
+    marks cohort membership, its magnitude the combine weight. Per
+    coordinate, the t = floor(beta * k) smallest and largest member values
+    are discarded (k = member count; t is clamped to (k-1)//2 so at least
+    one value survives) and the survivors are averaged with their weights
+    renormalized. beta = 0 is exactly the weighted mean ``sum(w x)/sum(w)``
+    and beta >= 1/2 degenerates to the median element(s). Empty coordinates
+    (k = 0) -> 0.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.broadcast_to(jnp.asarray(w, jnp.float32), x.shape)
+    member = w > 0
+    k = jnp.sum(member, axis=0)
+    t = jnp.minimum(jnp.floor(trim_frac * k),
+                    jnp.maximum((k - 1) // 2, 0)).astype(jnp.int32)
+    # rank members per coordinate; non-members sort to the top (stable, so
+    # ranks 0..k-1 land exactly on the members)
+    order = jnp.argsort(jnp.where(member, x, jnp.inf), axis=0, stable=True)
+    ranks = jnp.argsort(order, axis=0, stable=True)
+    keep = member & (ranks >= t) & (ranks < k - t)
+    wk = jnp.where(keep, w, 0.0)
+    denom = jnp.sum(wk, axis=0)
+    return jnp.where(denom > 0,
+                     jnp.sum(wk * x, axis=0) / jnp.maximum(denom, 1e-12),
+                     0.0)
+
+
+def coordinate_median(x: Array, member: Array) -> Array:
+    """Coordinate-wise median over member rows along axis 0.
+
+    member: bool mask broadcastable to x. Even member counts average the
+    two middle order statistics; empty coordinates -> 0. Breakdown point
+    1/2 per coordinate — the strongest of the three rules, at the price of
+    ignoring combine weights (every member counts once).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    member = jnp.broadcast_to(jnp.asarray(member, bool), x.shape)
+    k = jnp.sum(member, axis=0)
+    s = jnp.sort(jnp.where(member, x, jnp.inf), axis=0)
+    lo = jnp.take_along_axis(s, jnp.maximum((k - 1) // 2, 0)[None], axis=0)
+    hi = jnp.take_along_axis(s, jnp.maximum(k // 2, 0)[None], axis=0)
+    return jnp.where(k > 0, 0.5 * (lo + hi)[0], 0.0)
+
+
+def group_pairwise_sq(layout: mdlora.GroupLayout, deltas: Any) -> Array:
+    """Per-group pairwise squared distances: [K, K, G].
+
+    d2[i, j, g] = || delta_i - delta_j ||^2 restricted to group g's
+    parameters, accumulated over the layout's three leaf classes (fusion
+    row blocks, layer-stacked slices, whole leaves).
+    """
+    leaves = jax.tree_util.tree_flatten_with_path(deltas)[0]
+    K = leaves[0][1].shape[0]
+    acc = jnp.zeros((K, K, layout.G), jnp.float32)
+    for path, leaf in leaves:
+        p = mdlora.path_str(path)
+        x = leaf.astype(jnp.float32)
+        d = x[:, None] - x[None, :]  # [K, K, ...]
+        if p == layout.fusion_a_path:
+            rg = layout.row_group_vector(leaf.shape[1])
+            per_row = jnp.sum(jnp.square(d), axis=tuple(range(3, d.ndim)))
+            onehot = jnp.asarray(rg[:, None] == np.arange(layout.G)[None, :],
+                                 jnp.float32)
+            acc = acc + jnp.einsum("ijd,dg->ijg", per_row, onehot)
+        elif p in layout.leaf_axis0_groups:
+            ids = layout.leaf_axis0_groups[p]
+            per_l = jnp.sum(jnp.square(d), axis=tuple(range(3, d.ndim)))
+            onehot = jnp.asarray(ids[:, None] == np.arange(layout.G)[None, :],
+                                 jnp.float32)
+            acc = acc + jnp.einsum("ijl,lg->ijg", per_l, onehot)
+        elif p in layout.leaf_group:
+            g = layout.leaf_group[p]
+            acc = acc.at[:, :, g].add(
+                jnp.sum(jnp.square(d), axis=tuple(range(2, d.ndim))))
+    return acc
+
+
+def krum_select(d2: Array, member: Array, f: int) -> Array:
+    """Blockwise Krum selection (Blanchard et al., NeurIPS'17).
+
+    d2: [K, K, G] per-group pairwise squared distances; member: [K, G]
+    cohort membership. Per group, score_i = sum of the distances to i's
+    k - f - 2 nearest co-members (clamped to >= 1 neighbor) and the
+    lowest-scoring member is selected -> [G] int32 selected client row
+    (0 for empty groups — mask with ``member.any(0)``).
+    """
+    member = jnp.asarray(member, bool)
+    K = member.shape[0]
+    k = jnp.sum(member, axis=0)  # [G]
+    pair = (member[:, None, :] & member[None, :, :]
+            & ~jnp.eye(K, dtype=bool)[:, :, None])
+    ds = jnp.sort(jnp.where(pair, d2, jnp.inf), axis=1)  # [K, K, G]
+    csum = jnp.cumsum(jnp.where(jnp.isfinite(ds), ds, 0.0), axis=1)
+    nn = jnp.clip(k - f - 2, 1, jnp.maximum(k - 1, 1))  # [G]
+    idx = jnp.broadcast_to((nn - 1)[None, None, :], (K, 1, member.shape[1]))
+    score = jnp.take_along_axis(csum, idx, axis=1)[:, 0, :]  # [K, G]
+    return jnp.argmin(jnp.where(member, score, jnp.inf), axis=0)
+
+
+def robust_combine(layout: mdlora.GroupLayout, deltas: Any, W: Array,
+                   kind: str, trim_frac: float = 0.1,
+                   krum_f: int = 1) -> Any:
+    """Robust replacement for ``weighted_combine``: per-group location
+    estimates of the member deltas (membership = W > 0).
+
+    Same output scale as the Eq. 3 weighted mean (cohort_weights columns
+    sum to 1), so ``aggregate`` / the server flush consume it unchanged.
+    ``kind="mean"`` falls through to ``weighted_combine``; "krum" takes the
+    selected member's block verbatim via a one-hot weight matrix.
+    """
+    if kind not in ROBUST_AGGREGATORS:
+        raise ValueError(f"robust kind must be one of {ROBUST_AGGREGATORS}, "
+                         f"got {kind!r}")
+    W = jnp.asarray(W, jnp.float32)
+    if kind == "mean":
+        return mdlora.weighted_combine(layout, deltas, W)
+    if kind == "krum":
+        d2 = group_pairwise_sq(layout, deltas)
+        sel = krum_select(d2, W > 0, krum_f)
+        nonempty = jnp.any(W > 0, axis=0)
+        W_sel = jnp.zeros_like(W).at[sel, jnp.arange(W.shape[1])].set(
+            nonempty.astype(jnp.float32))
+        return mdlora.weighted_combine(layout, deltas, W_sel)
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(deltas)
+    out = []
+    for path, leaf in leaves:
+        p = mdlora.path_str(path)
+        x = leaf.astype(jnp.float32)
+        if p == layout.fusion_a_path:
+            w = W[:, jnp.asarray(layout.row_group_vector(leaf.shape[1]))]
+            w = w.reshape(w.shape + (1,) * (x.ndim - 2))
+        elif p in layout.leaf_axis0_groups:
+            w = W[:, jnp.asarray(layout.leaf_axis0_groups[p])]
+            w = w.reshape(w.shape + (1,) * (x.ndim - 2))
+        elif p in layout.leaf_group:
+            w = W[:, layout.leaf_group[p]]
+            w = w.reshape(w.shape + (1,) * (x.ndim - 1))
+        else:
+            out.append(jnp.zeros(leaf.shape[1:], jnp.float32))
+            continue
+        if kind == "trimmed":
+            out.append(trimmed_mean(x, w, trim_frac))
+        else:  # median
+            out.append(coordinate_median(x, w > 0))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
 # streaming cohort aggregation (async runtime / fleet-scale server)
 # ---------------------------------------------------------------------------
 
@@ -127,15 +293,29 @@ class CohortAggBuffer:
     same masked einsum reductions as ``weighted_combine``. Empty cohorts
     finalize to zero aggregate and zero divergence (frozen block), never
     NaN.
+
+    ``robust`` selects the within-cohort location estimate for the
+    *aggregate* ("mean" | "trimmed" | "median" | "krum"); divergence stats
+    are always the plain Eq. 5 sufficient statistics. Order statistics do
+    not stream — robust modes require exactly one ``push`` per finalize
+    (the async runtime flushes whole FedBuff cohorts, so this holds there
+    by construction) and a second chunked push raises.
     """
 
     def __init__(self, layout: mdlora.GroupLayout, proto: Any,
                  impl: str = "xla", interpret: bool | None = None,
-                 bd: int | None = None):
+                 bd: int | None = None, robust: str = "mean",
+                 trim_frac: float = 0.1, krum_f: int = 1):
+        if robust not in ROBUST_AGGREGATORS:
+            raise ValueError(f"robust must be one of {ROBUST_AGGREGATORS}, "
+                             f"got {robust!r}")
         self.layout = layout
         self.impl = impl
         self.interpret = interpret
         self.bd = bd
+        self.robust = robust
+        self.trim_frac = trim_frac
+        self.krum_f = krum_f
         # zero prototypes are derived once; reset() re-points the
         # accumulators at them (jnp arrays are immutable, sharing is safe),
         # so a long-lived buffer serves many flushes without re-allocating
@@ -150,6 +330,7 @@ class CohortAggBuffer:
         self._csum = self._zero_tree
         self._sq = self._zero_g
         self._cnt = self._zero_g
+        self._pushes = 0
 
     def _commit(self, treedef, agg_out, csum_out, sq: Array,
                 C: Array) -> None:
@@ -166,6 +347,12 @@ class CohortAggBuffer:
         from repro.kernels.cohort_agg import cohort_agg_divergence
 
         layout = self.layout
+        if self.robust != "mean":
+            if self._pushes > 0:
+                raise RuntimeError(
+                    f"robust={self.robust!r} aggregation needs the whole "
+                    "cohort in one push; chunked pushes are mean-only")
+            self._pushes += 1
         W = jnp.asarray(W, jnp.float32)
         C = jnp.asarray(C, jnp.float32)
         leaves, treedef = jax.tree_util.tree_flatten_with_path(deltas)
@@ -199,6 +386,12 @@ class CohortAggBuffer:
             else:
                 agg_out.append(jnp.zeros(leaf.shape[1:], jnp.float32))
                 csum_out.append(jnp.zeros(leaf.shape[1:], jnp.float32))
+        if self.robust != "mean":
+            # divergence stats above stay the plain sufficient statistics;
+            # only the aggregate is swapped for the robust estimate
+            agg_out = jax.tree_util.tree_flatten(robust_combine(
+                layout, deltas, W, self.robust, self.trim_frac,
+                self.krum_f))[0]
         self._commit(treedef, agg_out, csum_out, sq, C)
 
     def push_quantized(self, q: Any, scales: Any, W: Array, C: Array,
@@ -227,6 +420,17 @@ class CohortAggBuffer:
             staleness = jnp.zeros((W.shape[0],), jnp.float32)
         staleness = jnp.asarray(staleness, jnp.float32)
         disc = staleness_discount_ref(staleness, exponent)
+        if self.robust != "mean":
+            # Order statistics cannot be taken over int8 codes with
+            # per-client scales, so the fused compressed ingest does not
+            # apply: dequantize the chunk and take the fp32 path, folding
+            # the staleness discount into the weights up front (the dequant
+            # scale f rides along in x, so W*disc*f matches the fused
+            # einsum weights exactly). Costs one [K, ...] fp32 stack.
+            from repro import dist
+            x = dist.dequantize_int8_stacked(q, scales)
+            self.push(x, W * disc[:, None], C)
+            return
         leaves, treedef = jax.tree_util.tree_flatten_with_path(q)
         scale_leaves = jax.tree.leaves(scales)
         agg_out, csum_out = [], []

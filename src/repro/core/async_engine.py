@@ -72,7 +72,7 @@ from repro.core.engine import (AllocPlan, FedConfig, _rank_gates, allocate,
                                make_local_update, plan_allocation)
 from repro.core.strategies import AsyncStrategy
 from repro.core.tasks import MMTask
-from repro.sim import FleetConfig
+from repro.sim import FaultModel, FaultRuntime, FleetConfig
 from repro.sim import timing as T
 from repro.sim.events import AsyncTrace, EventQueue, completion_times
 from repro.sim.fleet import (FleetState, PopulationModel, pack_group_bits,
@@ -103,6 +103,9 @@ class AsyncFedConfig(FedConfig):
     snapshot_ring: int = 8  # retained model versions for cohort gradients
     churn_rate: float = 0.0  # departures per alive client per sim-second
     arrival_rate: float = 0.0  # re-arrivals per departed client per sim-sec
+    # fleet fault injection (sim/faults.py): Byzantine delta corruption,
+    # mid-round dropout, stalls. None (or byzantine_frac = 0) = fault-free.
+    faults: FaultModel | None = None
 
 
 @dataclasses.dataclass
@@ -124,7 +127,7 @@ def _make_state(G: int, trainable0: Any, seed: int) -> AsyncFedState:
 UPLINK_CODECS = ("none", "int8")
 
 
-def _check_strategy(strategy: AsyncStrategy, fed: "AsyncFedConfig") -> None:
+def _check_strategy(strategy: AsyncStrategy, fed: AsyncFedConfig) -> None:
     if strategy.personal or strategy.share_only:
         raise ValueError("async runtime keeps one global model; "
                          "personalized strategies are sync-only")
@@ -134,6 +137,16 @@ def _check_strategy(strategy: AsyncStrategy, fed: "AsyncFedConfig") -> None:
     if fed.uplink_codec not in UPLINK_CODECS:
         raise ValueError(f"uplink_codec must be one of {UPLINK_CODECS}, "
                          f"got {fed.uplink_codec!r}")
+    if strategy.robust not in AG.ROBUST_AGGREGATORS:
+        raise ValueError(f"robust must be one of {AG.ROBUST_AGGREGATORS}, "
+                         f"got {strategy.robust!r}")
+
+
+def _make_fault_runtime(fed: AsyncFedConfig,
+                        fleet: FleetConfig) -> FaultRuntime | None:
+    if fed.faults is not None and fed.faults.active:
+        return FaultRuntime(fed.faults, fleet.modality_mask)
+    return None
 
 
 def _history_init() -> dict:
@@ -155,6 +168,10 @@ class _Pending:
     t_comp: float
     t_comm: float
     upload_bytes: float
+    # fault-injected mid-round crash: the completion event still fires (it
+    # times the client's reboot + redispatch) but is never absorbed — no
+    # buffer entry, no energy/upload accounting, no progress
+    dropped: bool = False
 
 
 class _ServerFlushMixin:
@@ -304,21 +321,26 @@ class AsyncFedRun(_ServerFlushMixin):
     # quantization error stays on the device and is added to its next
     # update, so the compressed stream telescopes to the uncompressed one
     ef: dict = dataclasses.field(default_factory=dict)
+    fx: FaultRuntime | None = None  # fault injection (fed.faults)
 
     @classmethod
     def create(cls, task: MMTask, trainable0: Any, strategy: AsyncStrategy,
-               fleet: FleetConfig, fed: AsyncFedConfig) -> "AsyncFedRun":
+               fleet: FleetConfig, fed: AsyncFedConfig) -> AsyncFedRun:
         _check_strategy(strategy, fed)
         state = _make_state(task.layout.G, trainable0, fed.seed)
         trace = AsyncTrace()
         trace.init_fleet(fleet.N)
         aggbuf = AG.CohortAggBuffer(task.layout, trainable0,
                                     impl=fed.agg_impl,
-                                    interpret=fed.agg_interpret)
+                                    interpret=fed.agg_interpret,
+                                    robust=strategy.robust,
+                                    trim_frac=strategy.trim_frac,
+                                    krum_f=strategy.krum_f)
         return cls(task, strategy, fleet, fed, state,
                    make_local_update(task, fed, strategy.prox_mu),
                    _rank_gates(trainable0, strategy, fleet), EventQueue(),
-                   [], trace, _history_init(), aggbuf, trainable0)
+                   [], trace, _history_init(), aggbuf, trainable0,
+                   fx=_make_fault_runtime(fed, fleet))
 
     # -- client dispatch ------------------------------------------------------
 
@@ -335,6 +357,8 @@ class AsyncFedRun(_ServerFlushMixin):
         S_full, _ = allocate(self.strategy, state, task, fleet, fed,
                              layout.flops)
         S = S_full[clients]  # [K, G]
+        fault = (self.fx.on_dispatch(clients)
+                 if self.fx is not None else None)
 
         steps = fed.local_epochs * fed.steps_per_epoch
         batches = draw_client_batches(state.rng, dataset, clients, steps,
@@ -346,6 +370,9 @@ class AsyncFedRun(_ServerFlushMixin):
         rank_gate = jax.tree.map(lambda x: x[clients], self.rank_gate)
         deltas, losses = self.local_update(start, batches, mmasks, gates,
                                            rank_gate, fed.lr)
+        if fault is not None:  # corrupt pre-quantization, like a real client
+            dropped, slow, byz_rows, tickets = fault
+            deltas = self.fx.corrupt(deltas, byz_rows, clients, tickets)
 
         examples = steps * fed.batch_size
         if fed.sim_mode == "flop_proportional":
@@ -361,6 +388,9 @@ class AsyncFedRun(_ServerFlushMixin):
         dur, t_comp, t_comm = completion_times(
             fleet, clients, trained_fl, fixed_fl, upload, fed.t_overhead,
             fed.utilization, self.fed.jitter_sigma, state.rng)
+        if fault is not None:  # stalls stretch compute time (and its energy)
+            dur = dur + t_comp * (slow - 1.0)
+            t_comp = t_comp * slow
 
         quantize = fed.uplink_codec == "int8"
         losses_np = np.asarray(losses)
@@ -373,7 +403,8 @@ class AsyncFedRun(_ServerFlushMixin):
                 d_i = (q_i, s_i)
             pend = _Pending(int(c), state.round, d_i,
                             float(losses_np[i]), S[i], float(t_comp[i]),
-                            float(t_comm[i]), float(upload[i]))
+                            float(t_comm[i]), float(upload[i]),
+                            dropped=fault is not None and bool(dropped[i]))
             self.queue.push(now + dur[i], int(c), payload=pend)
 
     # -- server flush ---------------------------------------------------------
@@ -419,11 +450,13 @@ class AsyncFedRun(_ServerFlushMixin):
             completed = []
             for ev in events:
                 pend: _Pending = ev.payload
+                completed.append(ev.client)
+                if pend.dropped:  # crash: reboot + redispatch, nothing lands
+                    continue
                 self.buffer.append(pend)
                 self.trace.record_completion(fleet, ev.client, pend.t_comp,
                                              pend.t_comm, pend.upload_bytes)
                 processed += 1
-                completed.append(ev.client)
                 if len(self.buffer) >= K:
                     rec = self._flush()
                     self._log_and_eval(rec, dataset, log_every,
@@ -477,11 +510,17 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         self.proto = proto
         self.grad_mode = fed.grad_mode
         self.ring_clamped = 0  # cohort-mode pulls older than the ring
+        # fault injection: drop/stall/corruption flags are drawn at dispatch
+        # (counter-based, heap-parity) and consulted at absorb/flush time
+        self.fx = _make_fault_runtime(fed, fleet)
+        self._drop_next = np.zeros(fleet.N, bool)  # in-flight cycle crashes
+        self._fault_ticket = np.zeros(fleet.N, np.int64)  # in-flight ticket
         # buffered (completed, not yet flushed) client state — columnar
         self._buf_client: list[np.ndarray] = []
         self._buf_version: list[np.ndarray] = []
         self._buf_bits: list[np.ndarray] = []
         self._buf_ticket: list[np.ndarray] = []
+        self._buf_fticket: list[np.ndarray] = []  # fault tickets (fx only)
         self._buf_loss: list[np.ndarray] = []
         self._buf_deltas: list[Any] = []
         self._buf_scales: list[Any] = []  # uplink_codec="int8" only
@@ -506,7 +545,7 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
     @classmethod
     def create(cls, task: MMTask, trainable0: Any, strategy: AsyncStrategy,
                fleet: FleetConfig, fed: AsyncFedConfig
-               ) -> "VectorizedAsyncFedRun":
+               ) -> VectorizedAsyncFedRun:
         _check_strategy(strategy, fed)
         if fed.grad_mode not in GRAD_MODES:
             raise ValueError(f"grad_mode must be one of {GRAD_MODES}, "
@@ -527,7 +566,10 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
               if fed.grad_mode != "none" else None)
         aggbuf = AG.CohortAggBuffer(task.layout, trainable0,
                                     impl=fed.agg_impl,
-                                    interpret=fed.agg_interpret)
+                                    interpret=fed.agg_interpret,
+                                    robust=strategy.robust,
+                                    trim_frac=strategy.trim_frac,
+                                    krum_f=strategy.krum_f)
         return cls(task, strategy, fleet, fed, state, lu, plan,
                    FleetState.create(fleet.N), pop, trace, _history_init(),
                    aggbuf, trainable0)
@@ -551,6 +593,11 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         if B == 0:
             return
         S = allocate_rows(self.plan, self.strategy, state, idx)  # [B, G]
+        fault = None
+        if self.fx is not None:
+            fault = self.fx.on_dispatch(idx)
+            self._drop_next[idx] = fault[0]
+            self._fault_ticket[idx] = fault[3]
 
         steps = fed.local_epochs * fed.steps_per_epoch
         if self.grad_mode == "dispatch":
@@ -564,6 +611,8 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
             deltas, losses = self.local_update(
                 start, batches, mmasks, gates, self._rank_gate_rows(B),
                 fed.lr)
+            if fault is not None:  # corrupt pre-quantization (heap parity)
+                deltas = self.fx.corrupt(deltas, fault[2], idx, fault[3])
             quantize = fed.uplink_codec == "int8"
             if self._pend_deltas is None:
                 store_dtype = jnp.int8 if quantize else jnp.float32
@@ -610,6 +659,10 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         dur, t_comp, t_comm = T.cycle_times(
             fleet, idx, trained_fl, fixed_fl, upload, fed.t_overhead,
             fed.utilization, fed.jitter_sigma, state.rng)
+        if fault is not None:  # stalls stretch compute time (and energy)
+            slow = fault[1]
+            dur = dur + t_comp * (slow - 1.0)
+            t_comp = t_comp * slow
         self.fstate.dispatch(idx, now, state.round, pack_group_bits(S),
                              dur, t_comp, t_comm, upload)
 
@@ -621,6 +674,8 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         self._buf_version.append(fs.version[chunk].copy())
         self._buf_bits.append(fs.group_bits[chunk].copy())
         self._buf_ticket.append(fs.updates[chunk].copy())
+        if self.fx is not None:  # cycle's fault ticket, before redispatch
+            self._buf_fticket.append(self._fault_ticket[chunk].copy())
         if self.grad_mode == "dispatch":
             self._buf_loss.append(self._pend_loss[chunk].copy())
             jc = jnp.asarray(chunk)
@@ -687,6 +742,11 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         elif self.grad_mode == "cohort":
             deltas, losses = self._cohort_update(dataset, ids, versions,
                                                  tickets, S)
+            if self.fx is not None:  # corrupt with the *buffered* cycle's
+                # fault ticket — the client may already be redispatched
+                ftickets = np.concatenate(self._buf_fticket)[order]
+                deltas = self.fx.corrupt(deltas, self.fx.byz[ids], ids,
+                                         ftickets)
             if quantize:  # cohort-sampled gradients quantize at the edge
                 # of the simulated uplink (no EF: each (client, ticket)
                 # update is drawn exactly once at flush time)
@@ -695,8 +755,8 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         else:
             deltas, losses = None, None
         for buf in (self._buf_client, self._buf_version, self._buf_bits,
-                    self._buf_ticket, self._buf_loss, self._buf_deltas,
-                    self._buf_scales):
+                    self._buf_ticket, self._buf_fticket, self._buf_loss,
+                    self._buf_deltas, self._buf_scales):
             buf.clear()
         self._buf_count = 0
 
@@ -752,9 +812,19 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         last_t = state.sim_time
         while processed < total and fs.in_flight > 0:
             times, cand = fs.peek_window(K, fed.t_overhead)
-            if len(cand) > total - processed:
-                times = times[: total - processed]
-                cand = cand[: total - processed]
+            remaining = total - processed
+            if self.fx is not None:
+                # fault-dropped completions never count toward ``total``:
+                # cut the window after the ``remaining``-th *absorbable*
+                # event, exactly where the heap loop breaks mid-group —
+                # a plain prefix cut would split the redispatch batch and
+                # desync the jitter rng stream
+                kept_c = np.cumsum(~self._drop_next[cand])
+                if len(cand) and kept_c[-1] > remaining:
+                    cut = int(np.searchsorted(kept_c, remaining)) + 1
+                    times, cand = times[:cut], cand[:cut]
+            elif len(cand) > remaining:
+                times, cand = times[:remaining], cand[:remaining]
             fs.claim(cand)
             arrivals: list[np.ndarray] = []
             gstart = 0
@@ -776,10 +846,14 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
                 last_t = t0
                 if len(gidx) == 0:
                     continue
-                self._absorb(gidx, dataset, K, log_every)
-                processed += len(gidx)
+                kept = (gidx[~self._drop_next[gidx]]
+                        if self.fx is not None else gidx)
+                self._absorb(kept, dataset, K, log_every)
+                processed += len(kept)
                 if processed >= total:
                     break
+                # redispatch everything claimed — a dropped client reboots
+                # at the time its completion would have fired
                 self._dispatch_vec(gidx, t0, dataset)
             if arrivals and processed < total:
                 # genuine re-arrivals from population.step() only — claimed

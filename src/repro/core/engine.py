@@ -306,7 +306,7 @@ class FedRun:
 
     @classmethod
     def create(cls, task: MMTask, trainable0: Any, strategy: Strategy,
-               fleet: FleetConfig, fed: FedConfig) -> "FedRun":
+               fleet: FleetConfig, fed: FedConfig) -> FedRun:
         G = task.layout.G
         state = FedState(
             round=0, trainable=trainable0,

@@ -162,6 +162,12 @@ class AsyncStrategy(Strategy):
     buffer_size: int = 4
     staleness_exponent: float = 0.5
     max_staleness: int | None = None
+    # Byzantine-robust within-cohort reduction (core/aggregation.py):
+    #   mean | trimmed | median | krum. Non-mean modes reduce whole flush
+    #   cohorts with bounded-breakdown estimators; see robust_combine.
+    robust: str = "mean"
+    trim_frac: float = 0.1  # beta for robust="trimmed"
+    krum_f: int = 1  # assumed Byzantine count per cohort for robust="krum"
 
 
 def async_relief(buffer_size: int = 4, staleness_exponent: float = 0.5,
@@ -192,9 +198,36 @@ def async_fedbuff(buffer_size: int = 4, staleness_exponent: float = 0.5,
                          staleness_exponent=staleness_exponent, **kw)
 
 
+def relief_trimmed(trim_frac: float = 0.1, **kw) -> AsyncStrategy:
+    """async_relief with beta-trimmed-mean cohort reduction. Cheapest robust
+    rule; keeps combine weights; breaks down past ~trim_frac Byzantine."""
+    return AsyncStrategy("relief_trimmed", alloc="divergence",
+                         budgets="elastic", agg="cohort", mandatory=True,
+                         robust="trimmed", trim_frac=trim_frac, **kw)
+
+
+def relief_median(**kw) -> AsyncStrategy:
+    """async_relief with coordinate-median cohort reduction. Breakdown point
+    1/2 per coordinate; ignores combine weights (every member counts once)."""
+    return AsyncStrategy("relief_median", alloc="divergence",
+                         budgets="elastic", agg="cohort", mandatory=True,
+                         robust="median", **kw)
+
+
+def relief_krum(krum_f: int = 1, **kw) -> AsyncStrategy:
+    """async_relief with blockwise Krum cohort reduction: per modality group,
+    the single member delta closest to its k-f-2 nearest co-members is taken
+    verbatim. Strongest against collusion (never mixes attacker mass in);
+    assumes cohorts of at least f+3 members to be selective."""
+    return AsyncStrategy("relief_krum", alloc="divergence",
+                         budgets="elastic", agg="cohort", mandatory=True,
+                         robust="krum", krum_f=krum_f, **kw)
+
+
 ASYNC_STRATEGIES = {
     "async_relief": async_relief, "async_accessible": async_accessible,
-    "async_fedbuff": async_fedbuff,
+    "async_fedbuff": async_fedbuff, "relief_trimmed": relief_trimmed,
+    "relief_median": relief_median, "relief_krum": relief_krum,
 }
 
 

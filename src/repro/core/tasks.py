@@ -12,7 +12,8 @@ GroupLayout, and evaluation helpers. The engine never touches model details.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Sequence
+from collections.abc import Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,6 @@
 from repro.sim.devices import (DEVICE_PROFILES, DeviceProfile, FleetConfig,
                                make_fleet, scale_fleet)
+from repro.sim.faults import CORRUPTIONS, FaultModel, FaultRuntime
 from repro.sim.fleet import (FleetState, PopulationModel, pack_group_bits,
                              unpack_group_bits)
 from repro.sim.timing import RoundCost, cycle_times, simulate_round

@@ -73,7 +73,7 @@ class FleetConfig:
             self._names_arr = np.asarray(self.type_names)
         return self._names_arr
 
-    def subset(self, idx) -> "FleetConfig":
+    def subset(self, idx) -> FleetConfig:
         """Fleet restricted to client indices ``idx`` (sliced arrays; names
         via the cached string array, not a per-call list comprehension)."""
         idx = np.asarray(idx)

@@ -16,7 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Iterator
+from collections.abc import Iterator
+from typing import Any
 
 import numpy as np
 

@@ -80,7 +80,7 @@ class FleetState:
     in_flight: int = 0
 
     @classmethod
-    def create(cls, n: int) -> "FleetState":
+    def create(cls, n: int) -> FleetState:
         return cls(t_next=np.full(n, np.inf),
                    seq=np.zeros(n, np.int64),
                    version=np.zeros(n, np.int64),

@@ -1,0 +1,225 @@
+"""Fleet fault-injection tests (sim/faults.py + the async runtimes):
+deterministic seeded draws, per-cohort attack targeting, corruption
+semantics, dropout accounting, and composition with population churn."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.async_engine import (AsyncFedConfig, AsyncFedRun,
+                                     VectorizedAsyncFedRun)
+from repro.core.strategies import async_relief
+from repro.core.tasks import MMTask
+from repro.data import make_har_dataset, mm_config_for
+from repro.sim import FaultModel, FaultRuntime, make_fleet, scale_fleet
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_har_dataset("pamap2", windows_per_subject=60, seed=0)
+    cfg = mm_config_for("pamap2", backbone="cnn", d_feat=8, d_fused=32,
+                        cnn_ch=(8, 16))
+    task, tr0 = MMTask.create(cfg, KEY)
+    return ds, task, tr0
+
+
+def _tree(rng, k):
+    return {"a": rng.standard_normal((k, 6, 3)).astype(np.float32),
+            "b": rng.standard_normal((k, 4)).astype(np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# FaultModel: membership, draws, corruption
+# ---------------------------------------------------------------------------
+
+
+def test_validation():
+    with pytest.raises(ValueError, match="corruption"):
+        FaultModel(corruption="bogus")
+    with pytest.raises(ValueError, match="byzantine_frac"):
+        FaultModel(byzantine_frac=1.5)
+    assert not FaultModel().active
+    assert FaultModel(byzantine_frac=0.1).active
+
+
+def test_byzantine_mask_deterministic_and_sized():
+    mm = np.random.default_rng(0).random((200, 4)) > 0.5
+    fm = FaultModel(seed=11, byzantine_frac=0.25)
+    m1, m2 = fm.byzantine_mask(mm), fm.byzantine_mask(mm)
+    np.testing.assert_array_equal(m1, m2)
+    assert m1.sum() == round(0.25 * 200)
+    assert FaultModel(seed=12, byzantine_frac=0.25).byzantine_mask(
+        mm).sum() == m1.sum()  # same budget, different membership
+    assert (FaultModel(seed=12, byzantine_frac=0.25).byzantine_mask(mm)
+            != m1).any()
+
+
+def test_targeting_restricts_to_modality_possessors():
+    """target_modality concentrates the attacker budget inside one
+    modality's aggregation cohort — the rare-cohort attack."""
+    mm = np.random.default_rng(1).random((300, 4)) > 0.7  # modalities rare
+    fm = FaultModel(seed=5, byzantine_frac=0.5, target_modality=2)
+    byz = fm.byzantine_mask(mm)
+    assert byz.sum() == round(0.5 * mm[:, 2].sum())
+    assert not byz[~mm[:, 2]].any()  # only possessors of m=2 are attackers
+
+
+def test_cycle_faults_counter_based():
+    """A cycle's fate is a pure function of (seed, client, ticket): batch
+    composition and call order never change a draw, and honest clients
+    never fault."""
+    fm = FaultModel(seed=7, byzantine_frac=1.0, dropout_prob=0.5,
+                    stall_prob=0.5, stall_factor=3.0)
+    byz = np.array([True, True, False, True])
+    clients = np.arange(4)
+    d1, s1 = fm.cycle_faults(byz, clients, np.zeros(4, np.int64))
+    d2, s2 = fm.cycle_faults(byz, clients, np.zeros(4, np.int64))
+    np.testing.assert_array_equal(d1, d2)
+    np.testing.assert_array_equal(s1, s2)
+    assert not d1[2] and s1[2] == 1.0  # honest row untouched
+    # permuted batch: per-client outcomes move with the client
+    perm = np.array([3, 0, 2, 1])
+    dp, sp = fm.cycle_faults(byz, clients[perm], np.zeros(4, np.int64))
+    np.testing.assert_array_equal(dp, d1[perm])
+    np.testing.assert_array_equal(sp, s1[perm])
+    # different ticket => an independent draw exists somewhere in 32 cycles
+    draws = [fm.cycle_faults(byz, clients, np.full(4, t, np.int64))[0]
+             for t in range(32)]
+    assert any((d != d1).any() for d in draws)
+
+
+def test_corrupt_stack_sign_flip_and_rows():
+    rng = np.random.default_rng(2)
+    t = _tree(rng, 5)
+    fm = FaultModel(corruption="sign_flip", corruption_scale=2.0,
+                    byzantine_frac=0.4)
+    rows = np.array([False, True, False, False, True])
+    out = fm.corrupt_stack(t, rows, np.arange(5), np.zeros(5, np.int64))
+    for k in t:
+        np.testing.assert_allclose(np.asarray(out[k])[rows], -2.0 * t[k][rows])
+        np.testing.assert_allclose(np.asarray(out[k])[~rows], t[k][~rows])
+
+
+def test_corrupt_stack_collusion_shared_direction():
+    """All colluders push one identical direction, stable across cycles and
+    batches — the coordinated attack robust mean-rules are weakest against."""
+    rng = np.random.default_rng(3)
+    fm = FaultModel(seed=9, corruption="collusion", corruption_scale=1.0,
+                    byzantine_frac=0.5)
+    rows = np.array([True, True, False])
+    o1 = fm.corrupt_stack(_tree(rng, 3), rows, np.arange(3),
+                          np.zeros(3, np.int64))
+    o2 = fm.corrupt_stack(_tree(rng, 3), rows, np.arange(3),
+                          np.full(3, 17, np.int64))
+    for k in o1:
+        a = np.asarray(o1[k])
+        np.testing.assert_array_equal(a[0], a[1])  # colluders agree
+        np.testing.assert_array_equal(a[:2], np.asarray(o2[k])[:2])  # stable
+
+
+def test_corrupt_stack_gauss_batch_invariant():
+    """Gaussian blow-up noise is keyed by (client, ticket): the same cycle
+    corrupted in a different batch gets a bit-identical payload."""
+    rng = np.random.default_rng(4)
+    t = _tree(rng, 4)
+    fm = FaultModel(seed=1, corruption="gauss", corruption_scale=3.0,
+                    byzantine_frac=1.0)
+    full = fm.corrupt_stack(t, np.ones(4, bool), np.arange(4),
+                            np.arange(4, dtype=np.int64))
+    solo = fm.corrupt_stack(
+        jax.tree.map(lambda x: x[2:3], t), np.ones(1, bool),
+        np.array([2]), np.array([2], np.int64))
+    for k in t:
+        np.testing.assert_array_equal(np.asarray(full[k])[2],
+                                      np.asarray(solo[k])[0])
+
+
+def test_fault_runtime_tickets_advance():
+    mm = np.ones((6, 2), bool)
+    fx = FaultRuntime(FaultModel(byzantine_frac=0.5, dropout_prob=0.5), mm)
+    _, _, byz_rows, t0 = fx.on_dispatch(np.array([0, 3, 5]))
+    np.testing.assert_array_equal(t0, 0)
+    np.testing.assert_array_equal(byz_rows, fx.byz[[0, 3, 5]])
+    _, _, _, t1 = fx.on_dispatch(np.array([3, 4]))
+    np.testing.assert_array_equal(t1, [1, 0])  # per-client counters
+
+
+# ---------------------------------------------------------------------------
+# runtime integration: dropout accounting + churn composition
+# ---------------------------------------------------------------------------
+
+
+def test_dropout_slows_progress_not_accounting(setup):
+    """Dropped completions are pure loss: same absorbed-update total, more
+    simulated time, and no energy/updates accrued for the crashes."""
+    ds, task, tr0 = setup
+    fleet = scale_fleet(make_fleet(3, 3, 2, M=4), 60,
+                        np.random.default_rng(7))
+    kw = dict(rounds=1, local_epochs=1, steps_per_epoch=1, batch_size=4,
+              eval_every=0, seed=0)
+    runs = {}
+    for name, fm in (("clean", None),
+                     ("faulty", FaultModel(byzantine_frac=0.5,
+                                           dropout_prob=0.6,
+                                           corruption="none"))):
+        run = AsyncFedRun.create(task, tr0, async_relief(buffer_size=8),
+                                 fleet, AsyncFedConfig(faults=fm, **kw))
+        run.run(ds, total_updates=90)
+        runs[name] = run
+    assert runs["clean"].trace.completions == 90
+    assert runs["faulty"].trace.completions == 90  # absorbed, not attempted
+    # crashes burn wall-clock: same work takes longer under dropout
+    assert (runs["faulty"].state.sim_time > runs["clean"].state.sim_time)
+    byz = runs["faulty"].fx.byz
+    per = runs["faulty"].trace.per_client_updates
+    # honest clients are untouched by the fault layer's accounting
+    assert per[~byz].sum() > 0
+
+
+def test_dropout_composes_with_churn_invariants(setup):
+    """Fault-injected dropout and population churn cancel through disjoint
+    mechanisms (skip-absorb vs FleetState.lost) — no double-cancel: every
+    absorbed completion counts exactly once and the in-flight counter always
+    equals the number of scheduled completions."""
+    _, task, tr0 = setup
+    fleet = scale_fleet(make_fleet(3, 3, 2, M=4), 500,
+                        np.random.default_rng(3))
+    fm = FaultModel(seed=2, byzantine_frac=0.4, dropout_prob=0.5,
+                    stall_prob=0.3, stall_factor=3.0, corruption="none")
+    for fed_kw in ({"churn_rate": 0.5},
+                   {"churn_rate": 0.5, "arrival_rate": 0.5}):
+        run = VectorizedAsyncFedRun.create(
+            task, tr0, async_relief(buffer_size=64), fleet,
+            AsyncFedConfig(rounds=1, local_epochs=1, steps_per_epoch=1,
+                           batch_size=4, eval_every=0, seed=0,
+                           grad_mode="none", jitter_sigma=0.1, faults=fm,
+                           **fed_kw))
+        run.run(None, total_updates=1500)
+        fs = run.fstate
+        assert run.trace.completions == 1500, fed_kw
+        assert fs.in_flight == int(np.isfinite(fs.t_next).sum()), fed_kw
+        assert fs.in_flight <= int(fs.alive.sum()), fed_kw
+        assert fs.updates.sum() == 1500, fed_kw
+
+
+def test_stall_factor_stretches_sim_time(setup):
+    """Stalled cycles multiply compute time: the same absorbed-update budget
+    takes strictly longer and costs strictly more energy."""
+    _, task, tr0 = setup
+    fleet = scale_fleet(make_fleet(3, 3, 2, M=4), 200,
+                        np.random.default_rng(3))
+    kw = dict(rounds=1, local_epochs=1, steps_per_epoch=1, batch_size=4,
+              eval_every=0, seed=0, grad_mode="none")
+    out = {}
+    for name, fm in (("clean", None),
+                     ("stalled", FaultModel(byzantine_frac=0.5,
+                                            stall_prob=0.8, stall_factor=10.0,
+                                            corruption="none"))):
+        run = VectorizedAsyncFedRun.create(
+            task, tr0, async_relief(buffer_size=32), fleet,
+            AsyncFedConfig(faults=fm, **kw))
+        run.run(None, total_updates=600)
+        out[name] = run
+    assert out["stalled"].state.sim_time > out["clean"].state.sim_time
+    assert out["stalled"].trace.energy_j > out["clean"].trace.energy_j

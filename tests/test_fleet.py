@@ -10,7 +10,7 @@ from repro.core.async_engine import (AsyncFedConfig, AsyncFedRun,
 from repro.core.strategies import async_fedbuff, async_relief
 from repro.core.tasks import MMTask
 from repro.data import make_har_dataset, mm_config_for
-from repro.sim import make_fleet, scale_fleet
+from repro.sim import FaultModel, make_fleet, scale_fleet
 from repro.sim.fleet import (FleetState, PopulationModel, pack_group_bits,
                              unpack_group_bits)
 
@@ -127,12 +127,14 @@ def test_population_step_departs_and_arrives():
 # ---------------------------------------------------------------------------
 
 
-def _history_equiv(setup, strategy_fn, jitter_sigma, n=100, total=130):
+def _history_equiv(setup, strategy_fn, jitter_sigma, n=100, total=130,
+                   fed_extra=None):
     ds, task, tr0 = setup
     fleet = scale_fleet(make_fleet(3, 3, 2, M=4), n,
                         np.random.default_rng(7))
     kw = dict(rounds=1, local_epochs=1, steps_per_epoch=1, batch_size=4,
-              eval_every=0, seed=0, jitter_sigma=jitter_sigma)
+              eval_every=0, seed=0, jitter_sigma=jitter_sigma,
+              **(fed_extra or {}))
     ref = AsyncFedRun.create(task, tr0, strategy_fn(buffer_size=8),
                              fleet, AsyncFedConfig(**kw))
     ref.run(ds, total_updates=total)
@@ -168,6 +170,21 @@ def test_history_equivalence_fedavg_agg(setup):
     jitter — distinct completion times exercise the windowed extraction's
     one-event-per-group path."""
     _history_equiv(setup, async_fedbuff, jitter_sigma=0.3)
+
+
+@pytest.mark.parametrize("codec", ["none", "int8"])
+def test_history_equivalence_under_faults(setup, codec):
+    """Seeded fault injection keys every draw by (seed, client, dispatch
+    ticket), never by event order or the runtime's jitter rng — so dropout,
+    stalls, and targeted sign-flip corruption produce identical fault
+    realizations in both runtimes and the flush histories (and final
+    models) stay event-for-event identical, including through the int8
+    uplink codec (corruption happens client-side, pre-quantization)."""
+    fm = FaultModel(seed=3, byzantine_frac=0.3, corruption="sign_flip",
+                    corruption_scale=5.0, dropout_prob=0.3, stall_prob=0.3,
+                    stall_factor=4.0, target_modality=0)
+    _history_equiv(setup, async_relief, jitter_sigma=0.2,
+                   fed_extra={"faults": fm, "uplink_codec": codec})
 
 
 # ---------------------------------------------------------------------------

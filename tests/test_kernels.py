@@ -52,6 +52,21 @@ def test_mdlora_masked_blocks_are_inert():
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
 
 
+@pytest.mark.skipif(jax.default_backend() == "cpu",
+                    reason="needs a compiled pallas backend (TPU/GPU)")
+def test_mdlora_lowers_compiled():
+    """Smoke: the mdlora kernel compiles non-interpreted off-CPU."""
+    from repro.kernels.mdlora.ops import block_row_mask, mdlora_matmul
+
+    T, D, F, r = 128, 128, 128, 8
+    x = randn((T, D))
+    w0, a, b = randn((D, F), scale=0.05), randn((D, r)), randn((r, F))
+    mask = block_row_mask([D // 2, D // 2], [1.0, 0.0])
+    out = mdlora_matmul(x, w0, a, b, mask, impl="pallas", interpret=False,
+                        bt=64, bf=64, bd=64)
+    assert np.isfinite(np.asarray(out)).all()
+
+
 # ---------------------------------------------------------------------------
 # cohort_agg
 # ---------------------------------------------------------------------------
@@ -264,6 +279,22 @@ def test_flash_attention_bf16():
                                np.asarray(ref, np.float32), atol=3e-2)
 
 
+@pytest.mark.skipif(jax.default_backend() == "cpu",
+                    reason="needs a compiled pallas backend (TPU/GPU)")
+def test_flash_attention_lowers_compiled():
+    """Smoke: flash attention compiles non-interpreted off-CPU."""
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    B, S, K, G, hd = 2, 128, 2, 2, 32
+    q = randn((B, S, K, G, hd))
+    k = randn((B, S, K, hd))
+    v = randn((B, S, K, hd))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = flash_attention(q, k, v, pos, pos, None, None, impl="pallas",
+                          interpret=False, bq=32, bt=32)
+    assert np.isfinite(np.asarray(out)).all()
+
+
 # ---------------------------------------------------------------------------
 # ssd
 # ---------------------------------------------------------------------------
@@ -308,3 +339,21 @@ def test_ssd_kernel_matches_sequential_recurrence():
         np.testing.assert_allclose(np.asarray(y[:, t]), np.asarray(yt),
                                    atol=1e-4)
     np.testing.assert_allclose(np.asarray(fs), np.asarray(state), atol=1e-4)
+
+
+@pytest.mark.skipif(jax.default_backend() == "cpu",
+                    reason="needs a compiled pallas backend (TPU/GPU)")
+def test_ssd_lowers_compiled():
+    """Smoke: the ssd scan kernel compiles non-interpreted off-CPU."""
+    from repro.kernels.ssd.ops import ssd
+
+    b, s, h, p, n = 2, 128, 8, 16, 8
+    x = randn((b, s, h, p))
+    dt = jax.nn.softplus(randn((b, s, h)))
+    A_log = randn((h,))
+    Bm = randn((b, s, n))
+    Cm = randn((b, s, n))
+    y, fs = ssd(x, dt, A_log, Bm, Cm, chunk=32, impl="pallas",
+                interpret=False, bh=8)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(np.asarray(fs)).all()

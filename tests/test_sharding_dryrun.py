@@ -108,7 +108,7 @@ with mesh:
     coll = RL.parse_collectives(compiled.as_text())
 print(json.dumps({"flops": ca.get("flops", 0),
                   "colls": sum(coll.counts.values())}))
-""" % SRC
+""" % SRC  # noqa: UP031 — %r-quoting a path into a code template; an f-string would need every brace below escaped
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
