@@ -1,0 +1,213 @@
+"""Personalized-serving benchmark: continuous batching + gathered multi-LoRA
+decode vs naive one-model-at-a-time serving.
+
+RELIEF gives every client its own modality-block adapter, so "serving the
+fleet" means serving many tiny model variants at once. The naive baseline
+merges each request's adapter into a single-adapter model and decodes
+requests sequentially (jitted, but batch 1 and one dispatch chain per
+request). The engine (launch/serving_engine.py) decodes a mixed batch in
+lockstep: per-row ``adapter_idx`` gathers each request's adapter inside the
+fused mdlora kernel and requests join/leave the batch at step granularity.
+
+Sweeps batch-slots x n_adapters x request-length distribution on the
+phi3-medium SMOKE arch (CPU interpret-class numbers — relative speedups are
+the signal, not absolute tok/s). Every cell first checks the engine's
+greedy tokens are *identical* to the naive baseline's, then times both.
+
+Outputs
+    benchmarks/results/bench_serve.json   full sweep (schema-stable)
+    BENCH_serve.json (repo root)          committed baseline, written by
+                                          --update-baseline; --smoke runs
+                                          the batch=16 x 16-adapter cell
+                                          only and exits nonzero if the
+                                          engine speedup falls below
+                                          MIN_SPEEDUP or throughput
+                                          regresses >2x vs the baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, SCHEMA_VERSION, write_json
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                             "BENCH_serve.json")
+ARCH = "phi3-medium-14b"
+NEW_TOKENS = 8
+PROMPT_LENS = {"uniform": (6, 6), "ragged": (4, 10)}
+CELLS = ((4, 4, "uniform"), (8, 8, "ragged"), (16, 16, "uniform"),
+         (16, 16, "ragged"), (16, 4, "ragged"))
+SMOKE_CELL = (16, 16, "uniform")
+MIN_SPEEDUP = 3.0
+REGRESSION_FACTOR = 2.0
+
+
+def _requests(cfg, n, n_adapters, dist, seed):
+    from repro.launch.serving_engine import Request
+
+    rng = np.random.default_rng(seed)
+    lo, hi = PROMPT_LENS[dist]
+    return [Request(rid=f"r{i}",
+                    prompt=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(lo, hi + 1))),
+                    adapter=f"c{i % n_adapters}",
+                    max_new_tokens=NEW_TOKENS) for i in range(n)]
+
+
+def _setup(n_adapters, seed):
+    import jax
+
+    from repro.configs import base
+    from repro.launch.serving_engine import AdapterRegistry
+    from repro.models import api
+
+    cfg = base.get_arch(ARCH).SMOKE
+    params = api.init_model(jax.random.PRNGKey(seed), cfg)
+    reg = AdapterRegistry(jax.random.PRNGKey(1), cfg, capacity=n_adapters)
+    rng = np.random.default_rng(seed)
+    nb = len(reg.block_dims)
+    for i in range(n_adapters):
+        lora = api.init_model(jax.random.PRNGKey(50 + i), cfg)["lora"]
+        lora = jax.tree.map(
+            lambda x: x + 0.05 * jax.random.normal(
+                jax.random.PRNGKey(99 + i), x.shape, x.dtype), lora)
+        mm = np.ones(nb, np.float32)
+        if nb > 1 and i % 2:
+            mm[int(rng.integers(1, nb))] = 0.0  # some clients miss a block
+        reg.register(f"c{i}", lora, modality_mask=mm)
+    return cfg, params, reg
+
+
+def _run_engine(params, cfg, reg, reqs, batch_slots, max_len):
+    from repro.launch.serving_engine import ServingEngine
+
+    eng = ServingEngine(params, cfg, reg, batch_slots=batch_slots,
+                        max_len=max_len)
+    for r in reqs:
+        eng.submit(r)
+    return eng.run()
+
+
+def _cell(batch_slots, n_adapters, dist, seed=0) -> dict:
+    from repro.launch.serving_engine import naive_serve
+
+    cfg, params, reg = _setup(n_adapters, seed)
+    n_requests = 2 * batch_slots  # oversubscribed: slots recycle mid-run
+    reqs = _requests(cfg, n_requests, n_adapters, dist, seed)
+    max_len = PROMPT_LENS[dist][1] + NEW_TOKENS + 2
+
+    # correctness first: batched gathered decode == per-request merged decode
+    warm_naive = naive_serve(params, cfg, reg, reqs, max_len)
+    warm_eng = _run_engine(params, cfg, reg, reqs, batch_slots, max_len)
+    assert warm_eng["outputs"] == warm_naive["outputs"], \
+        "engine tokens diverged from per-request baseline"
+
+    # timed second pass (jit caches warm for both paths)
+    eng = _run_engine(params, cfg, reg, reqs, batch_slots, max_len)
+    naive = naive_serve(params, cfg, reg, reqs, max_len)
+    step_ms = 1e3 * np.asarray(eng["decode_step_times"] or [0.0])
+    return {
+        "arch": ARCH, "batch_slots": batch_slots, "n_adapters": n_adapters,
+        "dist": dist, "n_requests": n_requests, "new_tokens": NEW_TOKENS,
+        "generated_tokens": eng["generated_tokens"],
+        "engine_tok_s": round(eng["tok_s"], 2),
+        "naive_tok_s": round(naive["tok_s"], 2),
+        "speedup": round(eng["tok_s"] / max(naive["tok_s"], 1e-9), 3),
+        "engine_wall_s": round(eng["wall_s"], 4),
+        "naive_wall_s": round(naive["wall_s"], 4),
+        "latency_p50_s": round(eng["latency_p50_s"], 4),
+        "latency_p99_s": round(eng["latency_p99_s"], 4),
+        "decode_step_p50_ms": round(float(np.percentile(step_ms, 50)), 3),
+        "decode_step_p99_ms": round(float(np.percentile(step_ms, 99)), 3),
+    }
+
+
+def _roofline(batch_slots, n_adapters) -> list[dict]:
+    """Autotuned block plan for the cell's gathered projections."""
+    from repro.configs import base
+    from repro.launch.roofline import mdlora_block_plan
+
+    cfg = base.get_arch(ARCH).SMOKE
+    hhd = cfg.n_heads * cfg.head_dim
+    shapes = [
+        {"T": batch_slots, "D": cfg.d_model, "F": hhd, "r": cfg.lora_rank,
+         "multi": True, "n_adapters": n_adapters},  # wq
+        {"T": batch_slots, "D": hhd, "F": cfg.d_model, "r": cfg.lora_rank,
+         "multi": True, "n_adapters": n_adapters},  # wo (fusion)
+    ]
+    return mdlora_block_plan(shapes)
+
+
+def run_sweep(smoke: bool = False, seed: int = 0) -> list[dict]:
+    rows = []
+    cells = (SMOKE_CELL,) if smoke else CELLS
+    for bs, na, dist in cells:
+        rows.append(_cell(bs, na, dist, seed=seed))
+        r = rows[-1]
+        print(f"  B={bs:>2d} A={na:>2d} {dist:7s} engine "
+              f"{r['engine_tok_s']:8.1f} tok/s  naive "
+              f"{r['naive_tok_s']:8.1f} tok/s  speedup "
+              f"{r['speedup']:5.2f}x  p50 {r['latency_p50_s']:.3f}s "
+              f"p99 {r['latency_p99_s']:.3f}s")
+    return rows
+
+
+def check_gate(rows: list[dict]) -> int:
+    """CI gate on the batch=16 x 16-adapter cell: the gathered batched path
+    must hold >= MIN_SPEEDUP over naive serving, and must not have
+    regressed more than REGRESSION_FACTOR vs the committed baseline."""
+    bs, na, dist = SMOKE_CELL
+    cur = next((r for r in rows if r["batch_slots"] == bs
+                and r["n_adapters"] == na and r["dist"] == dist), None)
+    if cur is None:
+        print("smoke cell missing; skipping gate")
+        return 0
+    if cur["speedup"] < MIN_SPEEDUP:
+        print(f"perf gate: speedup {cur['speedup']:.2f}x < "
+              f"{MIN_SPEEDUP:.1f}x floor -> REGRESSION")
+        return 1
+    if os.path.exists(BASELINE_PATH):
+        with open(BASELINE_PATH) as f:
+            base = json.load(f)
+        brow = next((r for r in base.get("rows", [])
+                     if r["batch_slots"] == bs and r["n_adapters"] == na
+                     and r["dist"] == dist), None)
+        if brow is not None:
+            floor = brow["engine_tok_s"] / REGRESSION_FACTOR
+            status = "OK" if cur["engine_tok_s"] >= floor else "REGRESSION"
+            print(f"perf gate: engine {cur['engine_tok_s']:.1f} tok/s vs "
+                  f"baseline {brow['engine_tok_s']:.1f} "
+                  f"(floor {floor:.1f}) -> {status}; speedup "
+                  f"{cur['speedup']:.2f}x (>= {MIN_SPEEDUP:.1f}x) -> OK")
+            return 0 if status == "OK" else 1
+    print(f"perf gate: speedup {cur['speedup']:.2f}x >= "
+          f"{MIN_SPEEDUP:.1f}x -> OK (no committed baseline to compare)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="batch=16 x 16-adapter cell only + CI gate")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write the committed BENCH_serve.json baseline")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    rows = run_sweep(smoke=args.smoke, seed=args.seed)
+    payload = {"schema_version": SCHEMA_VERSION, "arch": ARCH,
+               "new_tokens": NEW_TOKENS, "rows": rows,
+               "roofline": _roofline(*SMOKE_CELL[:2])}
+    write_json(os.path.join(RESULTS_DIR, "bench_serve.json"), payload)
+    if args.update_baseline:
+        write_json(os.path.abspath(BASELINE_PATH), payload)
+        print(f"baseline written: {os.path.abspath(BASELINE_PATH)}")
+    return check_gate(rows)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,4 +1,4 @@
-"""Block-size selection for the cohort-agg kernels.
+"""Block-size selection for the cohort-agg and mdlora kernels.
 
 The kernel tiles the row dimension D of the fusion leaf into ``bd``-row
 blocks; N streams innermost so the four accumulators stay VMEM-resident.
@@ -106,4 +106,94 @@ def _timed_select(N: int, D: int, r: int, cands: list[int],
         med = sorted(ts)[len(ts) // 2]
         if med < best_t:
             best, best_t = bd, med
+    return best
+
+
+# ---------------------------------------------------------------------------
+# mdlora (fused block-LoRA projection) block selection
+# ---------------------------------------------------------------------------
+#
+# The projection kernels tile (T, F, D) -> (bt, bf, bd); the gathered
+# multi-adapter variant pins bt=1 (each batch row may use a different
+# adapter) and tunes (bf, bd) only. Same policy as the cohort-agg selector:
+# largest-divisor fewest-launches heuristic on interpret/XLA backends, a
+# timed sweep of the VMEM-feasible candidate cells on compiled Pallas.
+
+
+def _mdlora_vmem_bytes(bt: int, bf: int, bd: int, r: int) -> int:
+    # x tile + w0 tile + a tile + b tile + acc/u scratch, fp32
+    return 4 * (bt * bd + bd * bf + bd * r + r * bf + bt * (bf + r))
+
+
+def mdlora_candidates(T: int, D: int, F: int, r: int,
+                      multi: bool) -> list[tuple[int, int, int]]:
+    """Distinct VMEM-feasible (bt, bf, bd) cells (bt = 1 when ``multi``)."""
+    cands = set()
+    for cap in _CANDIDATE_CAPS:
+        bt = 1 if multi else largest_divisor(T, cap)
+        bf, bd = largest_divisor(F, cap), largest_divisor(D, cap)
+        if _mdlora_vmem_bytes(bt, bf, bd, r) <= _VMEM_ACC_BUDGET:
+            cands.add((bt, bf, bd))
+    return sorted(cands) or [(1, largest_divisor(F, 1), largest_divisor(D, 1))]
+
+
+def select_mdlora_blocks(shape: tuple[int, int, int, int],
+                         impl: str = "pallas", interpret: bool = True,
+                         multi: bool = False,
+                         n_adapters: int = 1) -> tuple[int, int, int]:
+    """Resolve (bt, bf, bd) for a [T, D] x [D, F] (rank r) projection."""
+    T, D, F, r = (int(x) for x in shape)
+    key = ("mdlora", T, D, F, r, impl, bool(interpret), bool(multi),
+           int(n_adapters), jax.default_backend())
+    if key not in _CACHE:
+        cands = mdlora_candidates(T, D, F, r, multi)
+        if impl != "pallas" or interpret or len(cands) == 1:
+            _CACHE[key] = cands[-1]
+        else:
+            _CACHE[key] = _timed_select_mdlora(T, D, F, r, cands, multi,
+                                               n_adapters)
+    return _CACHE[key]
+
+
+def _timed_select_mdlora(T: int, D: int, F: int, r: int,
+                         cands: list[tuple[int, int, int]], multi: bool,
+                         n_adapters: int) -> tuple[int, int, int]:
+    from repro.kernels.mdlora.kernel import (mdlora_matmul_multi_pallas,
+                                             mdlora_matmul_pallas)
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(T, D)), jnp.float32)
+    w0 = jnp.asarray(rng.normal(size=(D, F)) * 0.05, jnp.float32)
+    if multi:
+        A = max(int(n_adapters), 1)
+        a = jnp.asarray(rng.normal(size=(A, D, r)) * 0.1, jnp.float32)
+        b = jnp.asarray(rng.normal(size=(A, r, F)) * 0.1, jnp.float32)
+        idx = jnp.asarray(rng.integers(0, A, T), jnp.int32)
+        mask = jnp.asarray(rng.random((T, D)) < 0.8, jnp.float32)
+
+        def run(cell):
+            _, bf, bd = cell
+            return mdlora_matmul_multi_pallas(x, w0, a, b, idx, mask, 2.0,
+                                              bf=bf, bd=bd, interpret=False)
+    else:
+        a = jnp.asarray(rng.normal(size=(D, r)) * 0.1, jnp.float32)
+        b = jnp.asarray(rng.normal(size=(r, F)) * 0.1, jnp.float32)
+        mask = jnp.asarray(rng.random(D) < 0.8, jnp.float32)
+
+        def run(cell):
+            bt, bf, bd = cell
+            return mdlora_matmul_pallas(x, w0, a, b, mask, 2.0, bt=bt,
+                                        bf=bf, bd=bd, interpret=False)
+
+    best, best_t = cands[-1], float("inf")
+    for cell in cands:
+        jax.block_until_ready(run(cell))  # compile warm-up
+        ts = []
+        for _ in range(_SWEEP_REPS):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(cell))
+            ts.append(time.perf_counter() - t0)
+        med = sorted(ts)[len(ts) // 2]
+        if med < best_t:
+            best, best_t = cell, med
     return best

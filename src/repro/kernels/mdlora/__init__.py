@@ -1,1 +1,5 @@
-from repro.kernels.mdlora.ops import mdlora_matmul
+from repro.kernels.mdlora.ops import (block_row_mask, block_row_masks,
+                                      mdlora_matmul, mdlora_matmul_multi)
+
+__all__ = ["block_row_mask", "block_row_masks", "mdlora_matmul",
+           "mdlora_matmul_multi"]

@@ -44,6 +44,76 @@ def _kernel(x_ref, w0_ref, a_ref, b_ref, mask_ref, o_ref, acc_ref, u_ref, *,
         o_ref[...] = (acc_ref[...] + scale * lora).astype(o_ref.dtype)
 
 
+def _multi_kernel(idx_ref, x_ref, w0_ref, a_ref, b_ref, mask_ref, o_ref,
+                  acc_ref, u_ref, *, scale: float, n_d: int):
+    del idx_ref  # consumed by the BlockSpec index maps (adapter gather)
+    d_idx = pl.program_id(2)
+
+    @pl.when(d_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    xm = x_ref[...].astype(jnp.float32) * mask_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(xm, w0_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+    u_ref[...] += jnp.dot(xm, a_ref[0].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(d_idx == n_d - 1)
+    def _finish():
+        lora = jnp.dot(u_ref[...], b_ref[0].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scale * lora).astype(o_ref.dtype)
+
+
+def mdlora_matmul_multi_pallas(x, w0, a, b, adapter_idx, row_mask, scale,
+                               bf: int = 256, bd: int = 256,
+                               interpret: bool = False):
+    """Gathered multi-adapter decode: one fused pass serves a mixed batch.
+
+    x: [B, D]; w0: [D, F]; a: [A, D, r]; b: [A, r, F]; adapter_idx: [B];
+    row_mask: [B, D] -> [B, F].
+
+    ``adapter_idx`` is scalar-prefetched so the BlockSpec index maps can DMA
+    each row's adapter tiles straight out of the stacked [A, ...] store —
+    the per-request [B, D, r] gathered weight copies never exist. Rows tile
+    one at a time (each row may use a different adapter); the D axis streams
+    innermost with the base accumulator and the LoRA bottleneck u resident
+    in VMEM scratch, exactly like the single-adapter kernel.
+    """
+    B, D = x.shape
+    F = w0.shape[1]
+    r = a.shape[2]
+    bf, bd = min(bf, F), min(bd, D)
+    assert F % bf == 0 and D % bd == 0, (B, F, D, bf, bd)
+    n_d = D // bd
+
+    grid = (B, F // bf, n_d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda i, j, k, idx: (i, k)),  # x
+            pl.BlockSpec((bd, bf), lambda i, j, k, idx: (k, j)),  # w0
+            pl.BlockSpec((1, bd, r), lambda i, j, k, idx: (idx[i], k, 0)),
+            pl.BlockSpec((1, r, bf), lambda i, j, k, idx: (idx[i], 0, j)),
+            pl.BlockSpec((1, bd), lambda i, j, k, idx: (i, k)),  # row_mask
+        ],
+        out_specs=pl.BlockSpec((1, bf), lambda i, j, k, idx: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((1, bf), jnp.float32),
+            pltpu.VMEM((1, r), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_multi_kernel, scale=float(scale), n_d=n_d),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, F), x.dtype),
+        interpret=interpret,
+    )(adapter_idx, x, w0, a, b, row_mask)
+
+
 def mdlora_matmul_pallas(x, w0, a, b, row_mask, scale,
                          bt: int = 256, bf: int = 256, bd: int = 256,
                          interpret: bool = False):

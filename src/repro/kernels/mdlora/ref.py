@@ -17,3 +17,30 @@ def mdlora_matmul_ref(x, w0, a, b, row_mask, scale):
     lora = (xm.astype(jnp.float32) @ a.astype(jnp.float32)) @ \
         b.astype(jnp.float32) * scale
     return (base + lora).astype(x.dtype)
+
+
+def mdlora_matmul_multi_ref(x, w0, a, b, adapter_idx, row_mask, scale):
+    """Gathered multi-adapter oracle (S-LoRA/punica-style batched decode).
+
+        y[i] = (x[i] * mask[i]) @ W0
+             + ((x[i] * mask[i]) @ a[idx[i]]) @ b[idx[i]] * scale
+
+    x: [B, D] one token per request; w0: [D, F] shared frozen base;
+    a: [A, D, r] / b: [A, r, F] the stacked per-client adapter store;
+    adapter_idx: [B] int row -> adapter slot; row_mask: [B, D] per-request
+    modality availability over the fusion input rows (None = all present).
+    The gather is per *row*, so the batch can mix adapters freely — this is
+    the semantics the Pallas kernel reproduces without materializing the
+    [B, D, r] gathered weight copies.
+    """
+    if row_mask is None:
+        xm = x
+    else:
+        xm = x * row_mask.astype(x.dtype)
+    xm32 = xm.astype(jnp.float32)
+    base = xm32 @ w0.astype(jnp.float32)
+    a_g = jnp.take(a, adapter_idx, axis=0).astype(jnp.float32)  # [B, D, r]
+    b_g = jnp.take(b, adapter_idx, axis=0).astype(jnp.float32)  # [B, r, F]
+    u = jnp.einsum("bd,bdr->br", xm32, a_g)
+    lora = jnp.einsum("br,brf->bf", u, b_g) * scale
+    return (base + lora).astype(x.dtype)

@@ -114,6 +114,48 @@ def roofline_terms(cost: dict, hlo_text: str, scan_steps: int) -> dict:
     }
 
 
+def mdlora_block_plan(shapes, impl: str = "pallas",
+                      interpret: bool | None = None) -> list[dict]:
+    """Autotuned block plan + roofline terms for the mdlora kernels.
+
+    shapes: iterable of dicts {"T", "D", "F", "r"} and optionally
+    {"multi": bool, "n_adapters": int} — e.g. the serving engine's decode
+    batch (T = batch rows, multi = gathered adapter store). For each shape,
+    resolves (bt, bf, bd) through the shared timed-sweep autotuner
+    (kernels/cohort_agg/autotune.py; largest-divisor heuristic in interpret
+    mode) and reports the kernel's compute/memory roofline terms so the
+    serving bench can tell which side of the ridge a cell sits on.
+    """
+    from repro.kernels.cohort_agg.autotune import select_mdlora_blocks
+    from repro.kernels.runtime import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
+    out = []
+    for s in shapes:
+        T, D, F, r = int(s["T"]), int(s["D"]), int(s["F"]), int(s["r"])
+        multi = bool(s.get("multi", False))
+        A = int(s.get("n_adapters", 1))
+        bt, bf, bd = select_mdlora_blocks((T, D, F, r), impl=impl,
+                                          interpret=interpret, multi=multi,
+                                          n_adapters=A)
+        flops = 2.0 * T * D * (F + r) + 2.0 * T * r * F
+        # streamed bytes: x + w0 once per F-tile sweep, adapter tiles per
+        # row (multi) or once (single), output once; fp32 accumulators
+        adapter_rows = T if multi else 1
+        bytes_accessed = 4.0 * (T * D + D * F * (1 if T <= bt else T // bt)
+                                + adapter_rows * (D * r + r * F) + T * F)
+        t_c, t_m = flops / PEAK_FLOPS, bytes_accessed / HBM_BW
+        out.append({
+            "T": T, "D": D, "F": F, "r": r, "multi": multi,
+            "n_adapters": A, "bt": bt, "bf": bf, "bd": bd,
+            "flops": flops, "bytes": bytes_accessed,
+            "intensity": flops / max(bytes_accessed, 1.0),
+            "t_compute_s": t_c, "t_memory_s": t_m,
+            "dominant": "compute" if t_c >= t_m else "memory",
+        })
+    return out
+
+
 def model_flops(cfg, shape, train_mode: str = "lora") -> dict:
     """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), with the
     LoRA-adjusted ideal (~4*N*D: frozen weights skip dW) reported alongside."""

@@ -2,14 +2,65 @@
 host mesh. Demonstrates the serve path end-to-end (continuous greedy decode
 over a batch of synthetic prompts) for any assigned architecture.
 
+Prefill goes through ``models/api.prefill_with_cache``: attention archs run
+one chunked forward over the whole prompt (P-fold fewer dispatches than the
+historical per-token loop); recurrent archs (ssm/hybrid) keep the exact
+token loop their state recurrence requires.
+
+``--engine`` demos the continuous-batching multi-LoRA path instead: N
+personalized adapters, requests joining/leaving the decode batch mid-stream
+(launch/serving_engine.py).
+
 Usage:
   python -m repro.launch.serve --arch hymba-1.5b --smoke --prompt-len 64 \
       --decode-steps 32 --batch 4
+  python -m repro.launch.serve --arch phi3-medium-14b --smoke --engine \
+      --n-adapters 4 --batch 4
 """
 from __future__ import annotations
 
 import argparse
 import time
+
+
+def _run_engine(args, cfg):
+    import jax
+    import numpy as np
+
+    from repro.launch.serving_engine import (AdapterRegistry, Request,
+                                             ServingEngine)
+    from repro.models import api
+
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init_model(key, cfg)
+    rng = np.random.default_rng(args.seed)
+    reg = AdapterRegistry(jax.random.PRNGKey(1), cfg,
+                          capacity=args.n_adapters)
+    n_blocks = len(reg.block_dims)
+    for i in range(args.n_adapters):
+        lora = api.init_model(jax.random.PRNGKey(100 + i), cfg)["lora"]
+        mm = (rng.random(n_blocks) < 0.8).astype(np.float32)
+        mm[int(rng.integers(n_blocks))] = 1.0  # >=1 modality present
+        reg.register(f"client-{i}", lora, modality_mask=mm)
+
+    max_len = args.prompt_len + args.decode_steps + 2
+    eng = ServingEngine(params, cfg, reg, batch_slots=args.batch,
+                        max_len=max_len)
+    for r in range(args.batch * 2):  # 2x oversubscribed: slots recycle
+        plen = int(rng.integers(max(2, args.prompt_len // 2),
+                                args.prompt_len + 1))
+        eng.submit(Request(
+            rid=f"req-{r}", prompt=rng.integers(0, cfg.vocab, plen),
+            adapter=f"client-{r % args.n_adapters}",
+            max_new_tokens=args.decode_steps))
+    res = eng.run()
+    print(f"[serve/engine] {args.arch}: {len(res['outputs'])} requests, "
+          f"{res['generated_tokens']} tokens in {res['wall_s']:.2f}s "
+          f"({res['tok_s']:.1f} tok/s, p50 {res['latency_p50_s']:.3f}s, "
+          f"p99 {res['latency_p99_s']:.3f}s)")
+    sample = next(iter(res["outputs"].values()))
+    print("[serve/engine] sample:", sample[:16])
+    return res
 
 
 def main():
@@ -20,6 +71,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--decode-steps", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching multi-LoRA engine demo")
+    ap.add_argument("--n-adapters", type=int, default=4)
     args = ap.parse_args()
 
     import jax
@@ -31,6 +85,8 @@ def main():
 
     mod = base.get_arch(args.arch)
     cfg = mod.SMOKE if args.smoke else mod.FULL
+    if args.engine:
+        return _run_engine(args, cfg)
     key = jax.random.PRNGKey(args.seed)
     params = api.init_model(key, cfg)
     B, P = args.batch, args.prompt_len
@@ -42,14 +98,13 @@ def main():
     serve_step = jax.jit(SF.make_serve_step(cfg))
     caches = api.init_caches(cfg, B, max_len)
 
-    # prefill token-by-token through the cache path (uniform across
-    # families; production prefill for attention archs uses the chunked
-    # forward — benchmarked in the dry-run's prefill cells)
+    # chunked prefill (attention archs: one forward; ssm/hybrid: the cache
+    # path is the recurrence, so api falls back to the exact token loop)
     t0 = time.time()
-    tok = prompts[:, :1]
-    for pos in range(P):
-        tok_in = prompts[:, pos:pos + 1]
-        tok, caches = serve_step(params, caches, tok_in, jnp.int32(pos))
+    logits, caches = api.prefill_with_cache(params, cfg, caches, prompts)
+    tok = jnp.argmax(logits, axis=-1).astype(prompts.dtype)
+    if cfg.n_codebooks:
+        tok = tok.reshape(B, 1, cfg.n_codebooks)
     t_prefill = time.time() - t0
 
     out = []

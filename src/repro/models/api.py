@@ -105,25 +105,105 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict,
     return L.cross_entropy_logits(logits, labels) + aux_weight * aux
 
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                per_row_pos: bool = False) -> Any:
+    """``per_row_pos`` gives every batch row its own cache position leaf so
+    rows can sit at different sequence depths (continuous batching)."""
     if cfg.family in _TF_FAMILIES:
-        return TF.init_kv_caches(cfg, batch, max_len)
+        return TF.init_kv_caches(cfg, batch, max_len, per_row_pos=per_row_pos)
     if cfg.family == "ssm":
-        return SM.init_mamba_caches(cfg, batch, max_len)
+        return SM.init_mamba_caches(cfg, batch, max_len)  # positionless state
     if cfg.family == "hybrid":
-        return HY.init_hybrid_caches(cfg, batch, max_len)
+        return HY.init_hybrid_caches(cfg, batch, max_len,
+                                     per_row_pos=per_row_pos)
     raise ValueError(cfg.family)
 
 
 def decode_step(params: dict, cfg: ModelConfig, caches: Any, token: Array,
-                pos: Array) -> tuple[Array, Any]:
+                pos: Array, adapter_idx: Array | None = None,
+                fusion_mask: Array | None = None,
+                lora_impl: str = "xla") -> tuple[Array, Any]:
+    """One decode step. ``pos`` is a scalar (all rows at the same depth) or
+    [B] (per-row depths; needs ``init_caches(per_row_pos=True)``).
+    ``adapter_idx`` [B] selects per-row adapters from [A, ...]-stacked LoRA
+    leaves (gathered multi-tenant decode); ``fusion_mask`` [B, fusion_dim]
+    zeroes absent-modality blocks of the fusion projection input."""
     if cfg.family in _TF_FAMILIES:
-        return TF.lm_decode_step(params, cfg, caches, token, pos)
+        return TF.lm_decode_step(params, cfg, caches, token, pos,
+                                 adapter_idx=adapter_idx,
+                                 fusion_mask=fusion_mask, lora_impl=lora_impl)
     if cfg.family == "ssm":
+        if adapter_idx is not None or fusion_mask is not None:
+            raise ValueError("ssm family has no fusion projection; "
+                             "multi-adapter decode is not supported")
         return SM.mamba_decode_step(params, cfg, caches, token, pos)
     if cfg.family == "hybrid":
-        return HY.hybrid_decode_step(params, cfg, caches, token, pos)
+        return HY.hybrid_decode_step(params, cfg, caches, token, pos,
+                                     adapter_idx=adapter_idx,
+                                     fusion_mask=fusion_mask,
+                                     lora_impl=lora_impl)
     raise ValueError(cfg.family)
+
+
+def fusion_block_dims(cfg: ModelConfig) -> tuple[int, ...]:
+    """Modality-aligned column blocks of the fusion (``wo``) input axis.
+
+    hybrid: (attention features, SSD features) — the RELIEF Eq. 1 layout.
+    Attention families: one block per KV group (the concatenated-head axis
+    is K-major after the [B, S, K, G, hd] reshape), giving head-group
+    granularity for modality masks.
+    """
+    if cfg.family == "hybrid":
+        dm = HY.hybrid_dims(cfg)
+        return (dm["attn_out"], dm["d_inner"])
+    if cfg.family in _TF_FAMILIES:
+        g = cfg.n_heads // cfg.n_kv_heads
+        return (g * cfg.head_dim,) * cfg.n_kv_heads
+    raise ValueError(f"{cfg.family} has no fusion projection")
+
+
+def prefill_with_cache(params: dict, cfg: ModelConfig, caches: Any,
+                       tokens: Array, patches: Array | None = None,
+                       fusion_mask: Array | None = None
+                       ) -> tuple[Array, Any]:
+    """Prefill ``tokens`` [B, S] into ``caches``; -> (last-position logits
+    [B, 1, V], updated caches).
+
+    Attention families run one chunked forward over the whole prompt (the
+    q_chunk-tiled attention bounds peak memory) when every cache ring can
+    hold it; prompts longer than a sliding-window ring would overwrite
+    slots mid-forward, so those fall back to the exact per-token loop.
+    Recurrent families (ssm, hybrid) must advance their state
+    token-by-token — the cache path *is* the recurrence there.
+    Assumes fresh caches (prefill starts at position 0).
+    """
+    B, S = tokens.shape[:2]
+    if cfg.family in _TF_FAMILIES:
+        if isinstance(caches, dict) and "__per_sub__" in caches:
+            min_ring = min(c["k"].shape[2] for c in caches["__per_sub__"])
+        else:
+            min_ring = caches["k"].shape[2]
+        if S <= min_ring:
+            positions = jnp.arange(S, dtype=jnp.int32)
+            h, caches, _ = TF.lm_forward(params, cfg, tokens, patches=patches,
+                                         positions=positions, caches=caches,
+                                         skip_unembed=True,
+                                         fusion_mask=fusion_mask)
+            return TF.unembed(params, cfg, h[:, -1:]), caches
+        logits = None
+        for t in range(S):
+            logits, caches = decode_step(params, cfg, caches,
+                                         tokens[:, t:t + 1], jnp.int32(t),
+                                         fusion_mask=fusion_mask)
+        return logits, caches
+    if cfg.family not in ("ssm", "hybrid"):
+        raise ValueError(cfg.family)
+    logits = None
+    for t in range(S):
+        logits, caches = decode_step(
+            params, cfg, caches, tokens[:, t:t + 1], jnp.int32(t),
+            fusion_mask=fusion_mask if cfg.family == "hybrid" else None)
+    return logits, caches
 
 
 def param_count(params: Any) -> int:

@@ -58,21 +58,16 @@ def init_mamba_headless(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> dict
 
 
 def _attn_heads(p: dict, lp: dict | None, cfg: ModelConfig, x: Array,
-                positions: Array, cache: dict | None, window):
-    from repro.models.transformer import lora_delta
+                positions: Array, cache: dict | None, window,
+                ctx: dict | None = None):
+    from repro.models.transformer import _cache_scatter, _pos_scatter, _proj
 
     B, Sq, _ = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
 
-    def proj(w, name):
-        y = x @ w
-        if lp is not None and name in lp:
-            y = y + lora_delta(lp, name, x, cfg)
-        return y
-
-    q = proj(p["wq"], "wq").reshape(B, Sq, H, hd)
-    k = proj(p["wk"], "wk").reshape(B, Sq, K, hd)
-    v = proj(p["wv"], "wv").reshape(B, Sq, K, hd)
+    q = _proj(p["wq"], lp, "wq", x, cfg, ctx).reshape(B, Sq, H, hd)
+    k = _proj(p["wk"], lp, "wk", x, cfg, ctx).reshape(B, Sq, K, hd)
+    v = _proj(p["wv"], lp, "wv", x, cfg, ctx).reshape(B, Sq, K, hd)
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
 
@@ -82,9 +77,9 @@ def _attn_heads(p: dict, lp: dict | None, cfg: ModelConfig, x: Array,
     else:
         T = cache["k"].shape[1]
         slots = positions % T
-        kk = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
-        vv = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
-        kv_pos = cache["pos"].at[slots].set(positions)
+        kk = _cache_scatter(cache["k"], slots, k.astype(cache["k"].dtype))
+        vv = _cache_scatter(cache["v"], slots, v.astype(cache["v"].dtype))
+        kv_pos = _pos_scatter(cache["pos"], slots, positions)
         new_cache = {"k": kk, "v": vv, "pos": kv_pos}
 
     qg = q.reshape(B, Sq, K, H // K, hd)
@@ -94,22 +89,21 @@ def _attn_heads(p: dict, lp: dict | None, cfg: ModelConfig, x: Array,
 
 
 def hybrid_layer(p: dict, lp: dict | None, cfg: ModelConfig, x: Array,
-                 positions: Array, caches: dict | None, window):
+                 positions: Array, caches: dict | None, window,
+                 ctx: dict | None = None):
     """caches = {"attn": kv-cache, "ssm": {"conv","state"}} or None."""
-    from repro.models.transformer import lora_delta
+    from repro.models.transformer import _proj
 
     h = L.rmsnorm(p["ln1"], x)
     attn_cache = None if caches is None else caches["attn"]
     ssm_cache = None if caches is None else caches["ssm"]
 
     attn_out, new_attn = _attn_heads(p["attn"], lp, cfg, h, positions,
-                                     attn_cache, window)
+                                     attn_cache, window, ctx)
     ssm_out, new_ssm = S.mamba_mixer(p["mamba"], cfg, h, ssm_cache=ssm_cache,
                                      return_fused_input=True)
     fused = jnp.concatenate([attn_out, ssm_out], axis=-1)
-    y = fused @ p["wo"]
-    if lp is not None and "wo" in lp:
-        y = y + lora_delta(lp, "wo", fused, cfg)
+    y = _proj(p["wo"], lp, "wo", fused, cfg, ctx)
     x = x + y
     h2 = L.rmsnorm(p["ln2"], x)
     x = x + L.glu_mlp(p["mlp"], h2, cfg.activation)
@@ -195,15 +189,16 @@ def hybrid_forward(params: dict, cfg: ModelConfig, tokens: Array,
 
 
 def init_hybrid_caches(cfg: ModelConfig, batch: int, max_len: int,
-                       dtype=None) -> dict:
+                       dtype=None, per_row_pos: bool = False) -> dict:
     dtype = dtype or cfg.runtime_dtype()
     dm = hybrid_dims(cfg)
     T = int(min(_window(cfg), max_len))
     Lyr = cfg.n_layers
+    pos_shape = (Lyr, batch, T) if per_row_pos else (Lyr, T)
     return {
         "attn": {"k": jnp.zeros((Lyr, batch, T, cfg.n_kv_heads, cfg.head_dim), dtype),
                  "v": jnp.zeros((Lyr, batch, T, cfg.n_kv_heads, cfg.head_dim), dtype),
-                 "pos": jnp.full((Lyr, T), -1, jnp.int32)},
+                 "pos": jnp.full(pos_shape, -1, jnp.int32)},
         "ssm": {"conv": jnp.zeros((Lyr, batch, cfg.conv_kernel - 1, dm["conv_dim"]), dtype),
                 "state": jnp.zeros((Lyr, batch, dm["n_heads"], dm["p"], dm["n"]),
                                    jnp.float32)},
@@ -211,14 +206,23 @@ def init_hybrid_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def hybrid_decode_step(params: dict, cfg: ModelConfig, caches: dict,
-                       token: Array, pos: Array):
+                       token: Array, pos: Array,
+                       adapter_idx: Array | None = None,
+                       fusion_mask: Array | None = None,
+                       lora_impl: str = "xla"):
     x = jnp.take(params["base"]["embed"], token, axis=0).astype(cfg.runtime_dtype())
-    positions = pos[None].astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
+    ctx = None
+    if adapter_idx is not None or fusion_mask is not None:
+        ctx = {"adapter_idx": adapter_idx, "fusion_mask": fusion_mask,
+               "lora_impl": lora_impl}
     lora_layers = params.get("lora", {}).get("layers")
 
     def body(x, step):
         p, lp, cache = step
-        x, nc = hybrid_layer(p, lp, cfg, x, positions, cache, _window(cfg))
+        x, nc = hybrid_layer(p, lp, cfg, x, positions, cache, _window(cfg),
+                             ctx)
         return x, nc
 
     if cfg.scan_layers:

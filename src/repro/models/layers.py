@@ -132,8 +132,8 @@ def _chunked_attention(
     q: Array,  # [B, S, K, G, hd]  (G = heads per kv group)
     k: Array,  # [B, T, K, hd]
     v: Array,  # [B, T, K, hd]
-    q_positions: Array,  # [S] absolute positions of queries
-    kv_positions: Array,  # [T] absolute positions of keys (−1 ⇒ empty slot)
+    q_positions: Array,  # [S] or [B, S] absolute positions of queries
+    kv_positions: Array,  # [T] or [B, T] positions of keys (−1 ⇒ empty slot)
     window: Array | int | None,  # sliding window size (tokens), None = global
     attn_softcap_val: float | None,
     q_chunk: int,
@@ -143,7 +143,9 @@ def _chunked_attention(
     Never materializes the full [S, T] score matrix — peak live memory is
     [B, q_chunk, K, G, T] per chunk, which bounds compile-time memory analysis
     at 32k prefill. FLOPs are identical to the naive einsum. Works for decode
-    (S=1) and prefill (S=T) alike.
+    (S=1) and prefill (S=T) alike. Positions may carry a batch axis — the
+    continuous-batching serve path decodes rows sitting at different
+    sequence positions in one step.
     """
     B, S, K, G, hd = q.shape
     T = k.shape[1]
@@ -156,28 +158,34 @@ def _chunked_attention(
     n_chunks = S // q_chunk
     assert S % q_chunk == 0, f"S={S} not divisible by q_chunk={q_chunk}"
 
+    qp = q_positions if q_positions.ndim == 2 else q_positions[None]
+    qp = jnp.broadcast_to(qp, (B, S))
+    kvp = kv_positions if kv_positions.ndim == 2 else kv_positions[None]
+    kvp = jnp.broadcast_to(kvp, (B, T))
+
     qr = q.reshape(B, n_chunks, q_chunk, K, G, hd)
-    qpr = q_positions.reshape(n_chunks, q_chunk)
+    qpr = qp.reshape(B, n_chunks, q_chunk)
 
     def one_chunk(qc, qpos):
-        # qc: [B, qc, K, G, hd]; qpos: [qc]
+        # qc: [B, qc, K, G, hd]; qpos: [B, qc]
         s = jnp.einsum("bqkgh,btkh->bqkgt", qc.astype(jnp.float32) * scale,
                        k.astype(jnp.float32))
         s = softcap(s, attn_softcap_val)
-        valid = kv_positions >= 0  # [T]
-        causal = qpos[:, None] >= kv_positions[None, :]  # [qc, T]
-        in_window = (qpos[:, None] - kv_positions[None, :]) < window
-        mask = (causal & in_window & valid[None, :])[None, :, None, None, :]
+        valid = kvp >= 0  # [B, T]
+        causal = qpos[:, :, None] >= kvp[:, None, :]  # [B, qc, T]
+        in_window = (qpos[:, :, None] - kvp[:, None, :]) < window
+        mask = (causal & in_window & valid[:, None, :])[:, :, None, None, :]
         s = jnp.where(mask, s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bqkgt,btkh->bqkgh", p, v.astype(jnp.float32))
         return o.astype(q.dtype)
 
     if n_chunks == 1:
-        out = one_chunk(qr[:, 0], qpr[0])[:, None]
+        out = one_chunk(qr[:, 0], qpr[:, 0])[:, None]
     else:
         out = jax.lax.map(lambda args: one_chunk(*args),
-                          (qr.transpose(1, 0, 2, 3, 4, 5), qpr))
+                          (qr.transpose(1, 0, 2, 3, 4, 5),
+                           qpr.transpose(1, 0, 2)))
         out = out.transpose(1, 0, 2, 3, 4, 5)
     return out.reshape(B, S, K, G, hd)
 

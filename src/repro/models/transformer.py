@@ -134,7 +134,33 @@ def lora_delta(lora_p: dict | None, name: str, x: Array, cfg: ModelConfig) -> Ar
 
 
 def _proj(base_w: Array, lora_p: dict | None, name: str, x: Array,
-          cfg: ModelConfig) -> Array:
+          cfg: ModelConfig, ctx: dict | None = None) -> Array:
+    """Projection with LoRA. ``ctx`` carries the serving extensions:
+
+    * ``adapter_idx`` [B] — multi-tenant decode: ``lora_p`` leaves are
+      stacked [A, din, r] and each batch row applies its own adapter via
+      the gathered ``mdlora_matmul_multi`` kernel (one fused call, no
+      per-request weight copies). Requires S == 1 (decode).
+    * ``fusion_mask`` [B, din] — RELIEF modality row mask over the fusion
+      (``wo``) projection input; zeroes absent-modality blocks.
+    * ``lora_impl`` — "xla" | "pallas" for the gathered kernel.
+    """
+    if ctx is not None and ctx.get("adapter_idx") is not None:
+        from repro.kernels import mdlora as MD
+
+        mask = ctx.get("fusion_mask") if name == "wo" else None
+        if lora_p is not None and name in lora_p:
+            y = MD.mdlora_matmul_multi(
+                x[:, 0], base_w, lora_p[name]["a"], lora_p[name]["b"],
+                ctx["adapter_idx"], row_mask=mask,
+                scale=cfg.lora_alpha / cfg.lora_rank,
+                impl=ctx.get("lora_impl", "xla"))
+            return y[:, None].astype(x.dtype)
+        if mask is not None:
+            x = x * mask[:, None, :].astype(x.dtype)
+        return x @ base_w
+    if name == "wo" and ctx is not None and ctx.get("fusion_mask") is not None:
+        x = x * ctx["fusion_mask"][:, None, :].astype(x.dtype)
     return x @ base_w + lora_delta(lora_p, name, x, cfg)
 
 
@@ -143,16 +169,44 @@ def _proj(base_w: Array, lora_p: dict | None, name: str, x: Array,
 # ---------------------------------------------------------------------------
 
 
+def _cache_scatter(buf: Array, slots: Array, val: Array) -> Array:
+    """Write new entries into a ring buffer [B, T, ...].
+
+    slots [S] (shared positions) broadcasts over the batch; slots [B, S]
+    (per-row positions, continuous batching) scatters each row at its own
+    slot so requests mid-stream at different depths share one decode step.
+    """
+    if slots.ndim == 2:
+        bidx = jnp.arange(buf.shape[0])[:, None]
+        return buf.at[bidx, slots].set(val)
+    return buf.at[:, slots].set(val)
+
+
+def _pos_scatter(pos_buf: Array, slots: Array, positions: Array) -> Array:
+    """Update the cache position leaf: [T] shared or [B, T] per-row.
+
+    A per-row leaf written with shared 1-D positions (e.g. single-request
+    prefill into a per-row cache) broadcasts over the batch axis.
+    """
+    if slots.ndim == 2:
+        bidx = jnp.arange(pos_buf.shape[0])[:, None]
+        return pos_buf.at[bidx, slots].set(positions)
+    if pos_buf.ndim == 2:
+        return pos_buf.at[:, slots].set(positions)
+    return pos_buf.at[slots].set(positions)
+
+
 def _attention_lora(p: dict, lp: dict | None, cfg: ModelConfig, x: Array,
-                    positions: Array, kv_cache: dict | None, window) -> tuple:
+                    positions: Array, kv_cache: dict | None, window,
+                    ctx: dict | None = None) -> tuple:
     from repro.dist.sharding import act_hint
 
     dims = attn_dims(cfg)
     B, S, _ = x.shape
     H, K, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
-    q = act_hint(_proj(p["wq"], lp, "wq", x, cfg), "batch", None, "model")
-    k = act_hint(_proj(p["wk"], lp, "wk", x, cfg), "batch", None, "model")
-    v = act_hint(_proj(p["wv"], lp, "wv", x, cfg), "batch", None, "model")
+    q = act_hint(_proj(p["wq"], lp, "wq", x, cfg, ctx), "batch", None, "model")
+    k = act_hint(_proj(p["wk"], lp, "wk", x, cfg, ctx), "batch", None, "model")
+    v = act_hint(_proj(p["wv"], lp, "wv", x, cfg, ctx), "batch", None, "model")
     q = q.reshape(B, S, H, hd)
     k = k.reshape(B, S, K, hd)
     v = v.reshape(B, S, K, hd)
@@ -175,25 +229,27 @@ def _attention_lora(p: dict, lp: dict | None, cfg: ModelConfig, x: Array,
                            ).astype(jnp.int8)
             v8 = jnp.round(v.astype(jnp.float32) / vs[..., None]
                            ).astype(jnp.int8)
-            kk = kv_cache["k"].at[:, slots].set(k8)
-            vv = kv_cache["v"].at[:, slots].set(v8)
-            k_scale = kv_cache["k_scale"].at[:, slots].set(ks)
-            v_scale = kv_cache["v_scale"].at[:, slots].set(vs)
-            kv_pos = kv_cache["pos"].at[slots].set(positions)
+            kk = _cache_scatter(kv_cache["k"], slots, k8)
+            vv = _cache_scatter(kv_cache["v"], slots, v8)
+            k_scale = _cache_scatter(kv_cache["k_scale"], slots, ks)
+            v_scale = _cache_scatter(kv_cache["v_scale"], slots, vs)
+            kv_pos = _pos_scatter(kv_cache["pos"], slots, positions)
             new_cache = {"k": kk, "v": vv, "k_scale": k_scale,
                          "v_scale": v_scale, "pos": kv_pos}
         else:
             k_scale = v_scale = None
-            kk = kv_cache["k"].at[:, slots].set(k.astype(kv_cache["k"].dtype))
-            vv = kv_cache["v"].at[:, slots].set(v.astype(kv_cache["v"].dtype))
-            kv_pos = kv_cache["pos"].at[slots].set(positions)
+            kk = _cache_scatter(kv_cache["k"], slots,
+                                k.astype(kv_cache["k"].dtype))
+            vv = _cache_scatter(kv_cache["v"], slots,
+                                v.astype(kv_cache["v"].dtype))
+            kv_pos = _pos_scatter(kv_cache["pos"], slots, positions)
             new_cache = {"k": kk, "v": vv, "pos": kv_pos}
     if k_scale is not None:  # dequantize at use (transient, per layer)
         dt_ = cfg.runtime_dtype()
         kk = (kk.astype(jnp.float32) * k_scale[..., None]).astype(dt_)
         vv = (vv.astype(jnp.float32) * v_scale[..., None]).astype(dt_)
 
-    if cfg.attn_impl == "pallas":
+    if cfg.attn_impl == "pallas" and positions.ndim == 1 and kv_pos.ndim == 1:
         qg = q.reshape(B, S, K, H // K, hd)
         from repro.kernels.flash_attention import ops as fa_ops
         o = fa_ops.flash_attention(qg, kk, vv, positions, kv_pos, window,
@@ -213,18 +269,19 @@ def _attention_lora(p: dict, lp: dict | None, cfg: ModelConfig, x: Array,
                                  kv_pos, window, cfg.attn_softcap,
                                  cfg.q_chunk)
     o = act_hint(o.reshape(B, S, H * hd), "batch", None, "model")
-    return _proj(p["wo"], lp, "wo", o, cfg), new_cache
+    return _proj(p["wo"], lp, "wo", o, cfg, ctx), new_cache
 
 
 def _sublayer(p: dict, lp: dict | None, cfg: ModelConfig, x: Array,
-              positions: Array, cache: dict | None, window) -> tuple:
+              positions: Array, cache: dict | None, window,
+              ctx: dict | None = None) -> tuple:
     from repro.dist.sharding import act_hint
 
     seq_ax = "model" if cfg.seq_shard else None
     x = act_hint(x, "batch", seq_ax, None)  # residual (SP: seq-sharded)
     h = L.rmsnorm(p["ln1"], x)
     attn_out, new_cache = _attention_lora(p["attn"], lp, cfg, h, positions,
-                                          cache, window)
+                                          cache, window, ctx)
     if cfg.post_norms:
         attn_out = L.rmsnorm(p["ln1b"], attn_out)
     attn_out = act_hint(attn_out, "batch", seq_ax, None)  # SP: reduce-scatter
@@ -304,13 +361,20 @@ def _stacked_to_steps(tree, n_sub: int):
 
 def lm_forward(params: dict, cfg: ModelConfig, tokens: Array,
                patches: Array | None = None, positions: Array | None = None,
-               caches: list | None = None,
-               skip_unembed: bool = False) -> tuple[Array, list | None, Array]:
-    """-> (logits | final hidden, updated caches | None, moe aux loss)."""
+               caches: list | None = None, skip_unembed: bool = False,
+               fusion_mask: Array | None = None) -> tuple[Array, list | None, Array]:
+    """-> (logits | final hidden, updated caches | None, moe aux loss).
+
+    ``fusion_mask`` [B, n_heads*head_dim] zeroes absent-modality blocks of
+    the fusion (``wo``) projection input — the serving engine's chunked
+    prefill passes the request's modality mask here so prefill and decode
+    see identical masked features.
+    """
     x = embed_tokens(params, cfg, tokens, patches)
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.arange(S, dtype=jnp.int32)
+    ctx = None if fusion_mask is None else {"fusion_mask": fusion_mask}
     n_sub, windows = pattern(cfg)
     n_steps = cfg.n_layers // n_sub
 
@@ -326,7 +390,8 @@ def lm_forward(params: dict, cfg: ModelConfig, tokens: Array,
             p_s = jax.tree.map(lambda a: a[s], p_step)
             lp_s = jax.tree.map(lambda a: a[s], lp_step) if lp_step is not None else None
             c_s = None if cache_step is None else jax.tree.map(lambda a: a[s], cache_step)
-            x, nc, a = _sublayer(p_s, lp_s, cfg, x, positions, c_s, windows[s])
+            x, nc, a = _sublayer(p_s, lp_s, cfg, x, positions, c_s, windows[s],
+                                 ctx)
             new_caches.append(nc)
             aux = aux + a
         stacked_nc = (None if cache_step is None else
@@ -373,7 +438,7 @@ def cache_len(cfg: ModelConfig, sub: int, max_len: int) -> int:
 
 
 def init_kv_caches(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype=None) -> dict:
+                   dtype=None, per_row_pos: bool = False) -> dict:
     """Per-layer ring-buffer caches, stacked [L, B, T_l, K, hd].
 
     With an alternating pattern the two sublayer groups have different ring
@@ -381,6 +446,10 @@ def init_kv_caches(cfg: ModelConfig, batch: int, max_len: int,
     of per-sublayer entries; uniform patterns collapse to a single [L,...] set.
     Ring size = min(window, max_len) — sliding-window layers never allocate
     more than their window (this is what makes long_500k feasible).
+
+    ``per_row_pos`` allocates the position leaf per batch row ([L, B, T_l]
+    instead of [L, T_l]) so each row can sit at its own sequence depth —
+    the continuous-batching serving engine's layout.
     """
     dtype = dtype or cfg.runtime_dtype()
     n_sub, windows = pattern(cfg)
@@ -392,19 +461,20 @@ def init_kv_caches(cfg: ModelConfig, batch: int, max_len: int,
     caches = []
     for s in range(n_sub):
         T = int(min(windows[s], max_len))
+        pos_shape = (n_steps, batch, T) if per_row_pos else (n_steps, T)
         if cfg.kv_quant:
             caches.append({
                 "k": jnp.zeros((n_steps, batch, T, K, hd), jnp.int8),
                 "v": jnp.zeros((n_steps, batch, T, K, hd), jnp.int8),
                 "k_scale": jnp.zeros((n_steps, batch, T, K), jnp.float32),
                 "v_scale": jnp.zeros((n_steps, batch, T, K), jnp.float32),
-                "pos": jnp.full((n_steps, T), -1, dtype=jnp.int32),
+                "pos": jnp.full(pos_shape, -1, dtype=jnp.int32),
             })
         else:
             caches.append({
                 "k": jnp.zeros((n_steps, batch, T, K, hd), dtype=dtype),
                 "v": jnp.zeros((n_steps, batch, T, K, hd), dtype=dtype),
-                "pos": jnp.full((n_steps, T), -1, dtype=jnp.int32),
+                "pos": jnp.full(pos_shape, -1, dtype=jnp.int32),
             })
     # interleave sublayer slots back into a [L, ...]-indexed tree when ring
     # sizes agree; otherwise keep the per-sublayer list (forward handles both)
@@ -426,10 +496,24 @@ def _caches_for_scan(cfg: ModelConfig, caches):
 
 
 def lm_decode_step(params: dict, cfg: ModelConfig, caches, token: Array,
-                   pos: Array) -> tuple[Array, Any]:
-    """One-token decode. token: [B, 1]; pos: scalar int32."""
+                   pos: Array, adapter_idx: Array | None = None,
+                   fusion_mask: Array | None = None,
+                   lora_impl: str = "xla") -> tuple[Array, Any]:
+    """One-token decode. token: [B, 1]; pos: scalar int32 (all rows at the
+    same depth) or [B] int32 (per-row depths — continuous batching; requires
+    caches built with ``per_row_pos=True``).
+
+    ``adapter_idx`` [B] selects each row's adapter from [A, ...]-stacked
+    LoRA leaves (gathered multi-tenant decode); ``fusion_mask``
+    [B, n_heads*head_dim] zeroes absent-modality fusion blocks per row.
+    """
     x = embed_tokens(params, cfg, token)
-    positions = pos[None].astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
+    ctx = None
+    if adapter_idx is not None or fusion_mask is not None:
+        ctx = {"adapter_idx": adapter_idx, "fusion_mask": fusion_mask,
+               "lora_impl": lora_impl}
     n_sub, windows = pattern(cfg)
     n_steps = cfg.n_layers // n_sub
 
@@ -448,7 +532,8 @@ def lm_decode_step(params: dict, cfg: ModelConfig, caches, token: Array,
             p_s = jax.tree.map(lambda a: a[s], p_step)
             lp_s = jax.tree.map(lambda a: a[s], lp_step) if lp_step is not None else None
             c_s = cache_step[s] if per_sub else jax.tree.map(lambda a: a[s], cache_step)
-            x, nc, _ = _sublayer(p_s, lp_s, cfg, x, positions, c_s, windows[s])
+            x, nc, _ = _sublayer(p_s, lp_s, cfg, x, positions, c_s, windows[s],
+                                 ctx)
             new_caches.append(nc)
         out = (tuple(new_caches) if per_sub
                else jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches))

@@ -67,6 +67,110 @@ def test_mdlora_lowers_compiled():
     assert np.isfinite(np.asarray(out)).all()
 
 
+@pytest.mark.parametrize("B,D,F,r,A", [(8, 64, 128, 4, 3), (16, 128, 64, 8, 16),
+                                       (4, 256, 128, 16, 2)])
+def test_mdlora_multi_gathered_matches_per_row_loop(B, D, F, r, A):
+    """One gathered call == B single-adapter calls with each row's adapter."""
+    from repro.kernels.mdlora.ops import (block_row_masks, mdlora_matmul,
+                                          mdlora_matmul_multi)
+
+    x = randn((B, D))
+    w0 = randn((D, F), scale=0.05)
+    a = randn((A, D, r), scale=0.1)
+    b = randn((A, r, F), scale=0.1)
+    idx = jnp.asarray(KEY.integers(0, A, B), jnp.int32)
+    masks = block_row_masks([D // 2, D // 2],
+                            (KEY.random((B, 2)) < 0.7).astype(np.float32))
+    for impl in ("xla", "pallas"):
+        got = mdlora_matmul_multi(x, w0, a, b, idx, row_mask=masks,
+                                  impl=impl, interpret=True)
+        rows = [mdlora_matmul(x[i:i + 1], w0, a[int(idx[i])], b[int(idx[i])],
+                              masks[i], impl="xla") for i in range(B)]
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(jnp.concatenate(rows)),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_mdlora_multi_permutation_invariance():
+    """Row order must not change any row's result (continuous batching
+    shuffles which slot a request occupies)."""
+    from repro.kernels.mdlora.ops import mdlora_matmul_multi
+
+    B, D, F, r, A = 16, 128, 128, 8, 5
+    x = randn((B, D))
+    w0, a = randn((D, F), scale=0.05), randn((A, D, r), scale=0.1)
+    b = randn((A, r, F), scale=0.1)
+    idx = jnp.asarray(KEY.integers(0, A, B), jnp.int32)
+    mask = jnp.asarray(KEY.random((B, D)) < 0.8, jnp.float32)
+    perm = jnp.asarray(KEY.permutation(B), jnp.int32)
+    y = mdlora_matmul_multi(x, w0, a, b, idx, row_mask=mask,
+                            impl="pallas", interpret=True)
+    yp = mdlora_matmul_multi(x[perm], w0, a, b, idx[perm],
+                             row_mask=mask[perm], impl="pallas",
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(y)[np.asarray(perm)],
+                                  np.asarray(yp))
+
+
+def test_mdlora_multi_matches_single_when_uniform():
+    """All rows on one adapter == the single-adapter kernel."""
+    from repro.kernels.mdlora.ops import mdlora_matmul, mdlora_matmul_multi
+
+    B, D, F, r = 32, 64, 64, 4
+    x = randn((B, D))
+    w0, a = randn((D, F), scale=0.05), randn((1, D, r), scale=0.1)
+    b = randn((1, r, F), scale=0.1)
+    mask = jnp.ones((D,), jnp.float32)
+    y1 = mdlora_matmul(x, w0, a[0], b[0], mask, impl="xla")
+    y2 = mdlora_matmul_multi(x, w0, a, b, jnp.zeros(B, jnp.int32),
+                             impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+@pytest.mark.skipif(jax.default_backend() == "cpu",
+                    reason="needs a compiled pallas backend (TPU/GPU)")
+def test_mdlora_multi_lowers_compiled():
+    from repro.kernels.mdlora.ops import mdlora_matmul_multi
+
+    B, D, F, r, A = 16, 128, 128, 8, 4
+    x = randn((B, D))
+    w0, a = randn((D, F), scale=0.05), randn((A, D, r), scale=0.1)
+    b = randn((A, r, F), scale=0.1)
+    idx = jnp.asarray(KEY.integers(0, A, B), jnp.int32)
+    out = mdlora_matmul_multi(x, w0, a, b, idx, impl="pallas",
+                              interpret=False)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_mdlora_autotune_blocks_and_roofline_plan():
+    """Autotuner returns VMEM-feasible divisors; roofline plan is coherent."""
+    from repro.kernels.cohort_agg.autotune import (clear_cache,
+                                                   mdlora_candidates,
+                                                   select_mdlora_blocks)
+    from repro.launch.roofline import mdlora_block_plan
+
+    clear_cache()
+    try:
+        bt, bf, bd = select_mdlora_blocks((16, 192, 384, 8), multi=True,
+                                          n_adapters=4)
+        assert bt == 1 and 384 % bf == 0 and 192 % bd == 0
+        for cell in mdlora_candidates(48, 192, 384, 8, multi=False):
+            assert 48 % cell[0] == 0 and 384 % cell[1] == 0 \
+                and 192 % cell[2] == 0
+        plan = mdlora_block_plan([
+            {"T": 16, "D": 192, "F": 384, "r": 8, "multi": True,
+             "n_adapters": 4},
+            {"T": 64, "D": 128, "F": 128, "r": 4}])
+        assert len(plan) == 2
+        for row in plan:
+            assert row["flops"] > 0 and row["bytes"] > 0
+            assert row["dominant"] in ("compute", "memory")
+            assert row["F"] % row["bf"] == 0 and row["D"] % row["bd"] == 0
+        assert plan[0]["bt"] == 1 and plan[0]["multi"]
+    finally:
+        clear_cache()
+
+
 # ---------------------------------------------------------------------------
 # cohort_agg
 # ---------------------------------------------------------------------------
