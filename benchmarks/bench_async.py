@@ -29,28 +29,26 @@ def _async_cell(spec: BenchSpec, buffer_size: int, staleness_exp: float,
                 rounds: int) -> dict:
     import jax
 
-    from repro.core.async_engine import AsyncFedConfig, AsyncFedRun
-    from repro.core.strategies import async_relief
+    from repro.core.async_engine import AsyncFedRun
     from repro.core.tasks import MMTask
-    from repro.data import make_har_dataset, mm_config_for
-    from repro.sim import make_fleet
+    from repro.data import get_provider
+    from repro.sim import ScenarioSpec, build_scenario
 
-    ds = make_har_dataset(spec.dataset, windows_per_subject=spec.windows,
-                          seed=spec.seed)
-    n_low = 2 if spec.dataset == "pamap2" else 4
-    fleet = make_fleet(3, 3, n_low, M=4, hetero_scale=spec.hetero_scale)
-    cfg = mm_config_for(spec.dataset, backbone="cnn", d_feat=16, d_fused=64,
-                        cnn_ch=(16, 32))
+    sspec = ScenarioSpec(
+        "bench_async", dataset=spec.dataset,
+        windows_per_subject=spec.windows,
+        fleet=(3, 3, 2 if spec.dataset == "pamap2" else 4),
+        hetero_scale=spec.hetero_scale, strategy="async_relief",
+        strategy_args=(("buffer_size", buffer_size),
+                       ("staleness_exponent", staleness_exp)),
+        rounds=rounds, eval_every=0, t_overhead=1e-3, seed=spec.seed)
+    sc = build_scenario(sspec, sim_mode=spec.sim_mode)
+    cfg = get_provider(spec.dataset).mm_config(sspec.backbone,
+                                               small=sspec.small_model)
     task, tr0 = MMTask.create(cfg, jax.random.PRNGKey(spec.seed))
-    fed = AsyncFedConfig(rounds=rounds, eval_every=0, seed=spec.seed,
-                         utilization=2e-5, t_overhead=1e-3,
-                         sim_mode=spec.sim_mode)
-    run = AsyncFedRun.create(
-        task, tr0, async_relief(buffer_size=buffer_size,
-                                staleness_exponent=staleness_exp),
-        fleet, fed)
-    h = run.run(ds)
-    return {"history": h, "run": run, "fleet": fleet}
+    run = AsyncFedRun.create(task, tr0, sc.strategy, sc.fleet, sc.fed)
+    h = run.run(sc.dataset)
+    return {"history": h, "run": run, "fleet": sc.fleet}
 
 
 def _time_to_loss(times, losses, target: float, window: int = 3):

@@ -15,7 +15,7 @@ import numpy as np
 from benchmarks.common import RESULTS_DIR
 from repro.core import mdlora
 from repro.core.engine import FedConfig, FedRun
-from repro.core.strategies import get_strategy
+from repro.core import strategies
 from repro.core.tasks import MMTask
 from repro.data import make_har_dataset, mm_config_for
 from repro.sim import make_fleet
@@ -59,7 +59,7 @@ def run(rounds: int = 24, seed: int = 0, quick: bool = False,
     task, tr0 = MMTask.create(cfg, jax.random.PRNGKey(seed))
     fed = FedConfig(rounds=rounds, eval_every=rounds,
                     local_epochs=2, steps_per_epoch=4, seed=seed)
-    run_ = FedRun.create(task, tr0, get_strategy("fedavg"), fleet, fed)
+    run_ = FedRun.create(task, tr0, strategies.get("fedavg"), fleet, fed)
 
     # instrument: capture per-round deltas + divergence phases
     full_pairs = [(0, 1), (0, 2), (1, 2)]  # Full-Full

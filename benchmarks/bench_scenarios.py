@@ -1,0 +1,176 @@
+"""Scenario-matrix benchmark: missing-modality generators x strategies.
+
+Sweeps the scenario library (sim/scenarios.py) over protocol strategies on
+the heap async runtime — every cell of a (scenario, strategy) pair shares
+the same seeded fleet, dataset and dispatch schedule, so differences are
+attributable to the strategy alone. The default matrix runs the paper's
+RELIEF allocation (async_relief), the FedAvg-style async baseline
+(async_fedbuff), the accessible-allocation control (async_accessible),
+and the FedMFS-style selective-communication strategy (fedmfs_selective,
+arXiv:2310.07048) across static 10/30/50% missing, tier-correlated, and
+time-varying streaming scenarios. The headline check: selective uploads
+strictly fewer bytes than its non-selective twin (async_accessible — same
+training, same dispatch) at comparable final F1.
+
+Outputs
+    benchmarks/results/bench_scenarios.json   full matrix (schema-stable)
+    BENCH_scenarios.json (repo root)          committed baseline, written by
+                                              --update-baseline; --smoke runs
+                                              the mini-matrix
+                                              (static30, stream30) x
+                                              (async_relief,
+                                              async_accessible,
+                                              fedmfs_selective)
+                                              and exits nonzero if the
+                                              selective-upload invariant or
+                                              the baseline tolerances break
+                                              (the CI scenario gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, SCHEMA_VERSION, write_json
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                             "BENCH_scenarios.json")
+
+SCENARIO_NAMES = ("static10", "static30", "static50", "tiered30", "stream30")
+METHODS = ("async_relief", "async_fedbuff", "async_accessible",
+           "fedmfs_selective")
+SMOKE_SCENARIOS = ("static30", "stream30")
+SMOKE_METHODS = ("async_relief", "async_accessible", "fedmfs_selective")
+
+# gate tolerances: uploads are seeded-deterministic (tight); F1 on tiny
+# smoke runs moves with BLAS/JAX versions (loose, absolute)
+UPLOAD_REL_TOL = 1.5
+F1_ABS_TOL = 0.15
+
+
+def _cell(scenario: str, method: str, total_updates: int,
+          windows: int, seed: int) -> dict:
+    from repro.sim import get_scenario, make_run
+
+    spec = get_scenario(
+        scenario, strategy=method, seed=seed, windows_per_subject=windows,
+        local_epochs=1, steps_per_epoch=2, batch_size=16, eval_every=0,
+        total_updates=total_updates)
+    run, sc = make_run(spec)
+    t0 = time.perf_counter()
+    hist = run.run(sc.dataset)
+    wall = time.perf_counter() - t0
+    return {
+        "scenario": scenario, "method": method,
+        "missing": spec.missing, "missing_ratio": spec.missing_ratio,
+        "f1": round(float(hist["f1"][-1]), 4),
+        "upload_mb": round(float(run.trace.upload_mb), 6),
+        "sim_time_s": round(float(run.state.sim_time), 4),
+        "flushes": int(run.trace.flushes),
+        "staleness_mean": round(float(np.mean(hist["staleness_mean"])), 3),
+        "selected_frac": round(float(np.mean(hist["selected_frac"])), 4),
+        "wall_s": round(wall, 3),
+    }
+
+
+def run_matrix(smoke: bool = False, total_updates: int = 48,
+               windows: int = 60, seed: int = 0) -> list[dict]:
+    scenarios = SMOKE_SCENARIOS if smoke else SCENARIO_NAMES
+    methods = SMOKE_METHODS if smoke else METHODS
+    rows = []
+    for scenario in scenarios:
+        for method in methods:
+            row = _cell(scenario, method, total_updates, windows, seed)
+            rows.append(row)
+            print(f"  {scenario:10s} {method:18s} F1 {row['f1']:.3f} "
+                  f"up {row['upload_mb']:8.4f}MB sel {row['selected_frac']:.2f} "
+                  f"wall {row['wall_s']:6.1f}s")
+    return rows
+
+
+def _by_key(rows: list[dict]) -> dict[tuple[str, str], dict]:
+    return {(r["scenario"], r["method"]): r for r in rows}
+
+
+def check_gate(rows: list[dict]) -> int:
+    """CI gate, two parts: (1) hard invariant — fedmfs_selective is
+    async_accessible plus the selective uploader (identical training and
+    dispatch), so it must upload strictly fewer bytes on every shared
+    scenario; (2) committed BENCH_scenarios.json tolerances on upload
+    volume and final F1."""
+    failures = []
+    cur = _by_key(rows)
+    for (scenario, method), row in cur.items():
+        if method != "fedmfs_selective":
+            continue
+        ref = cur.get((scenario, "async_accessible"))
+        if ref is None:
+            continue
+        if row["upload_mb"] >= ref["upload_mb"]:
+            failures.append(
+                f"{scenario}: selective uploaded {row['upload_mb']:.4f}MB "
+                f">= accessible {ref['upload_mb']:.4f}MB")
+        else:
+            print(f"selective gate: {scenario} {row['upload_mb']:.4f}MB < "
+                  f"{ref['upload_mb']:.4f}MB OK "
+                  f"(dF1 {row['f1'] - ref['f1']:+.3f})")
+
+    if not os.path.exists(BASELINE_PATH):
+        print("no committed BENCH_scenarios.json baseline; skipping "
+              "tolerance gate")
+    else:
+        with open(BASELINE_PATH) as f:
+            base = _by_key(json.load(f).get("rows", []))
+        for key, row in cur.items():
+            ref = base.get(key)
+            if ref is None:
+                continue
+            lo = ref["upload_mb"] / UPLOAD_REL_TOL
+            hi = ref["upload_mb"] * UPLOAD_REL_TOL
+            if not lo <= row["upload_mb"] <= hi:
+                failures.append(
+                    f"{key}: upload {row['upload_mb']:.4f}MB outside "
+                    f"[{lo:.4f}, {hi:.4f}] of baseline")
+            if row["f1"] < ref["f1"] - F1_ABS_TOL:
+                failures.append(
+                    f"{key}: F1 {row['f1']:.3f} < baseline "
+                    f"{ref['f1']:.3f} - {F1_ABS_TOL}")
+        print(f"baseline gate: {len(cur)} rows checked against "
+              f"{os.path.basename(BASELINE_PATH)}")
+
+    for msg in failures:
+        print(f"GATE FAIL: {msg}")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="2x2 mini-matrix + gate (CI)")
+    ap.add_argument("--total-updates", type=int, default=48,
+                    help="absorbed client completions per cell")
+    ap.add_argument("--windows", type=int, default=60,
+                    help="windows per subject (dataset size)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write the committed BENCH_scenarios.json baseline")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    rows = run_matrix(smoke=args.smoke, total_updates=args.total_updates,
+                      windows=args.windows, seed=args.seed)
+    payload = {"schema_version": SCHEMA_VERSION,
+               "total_updates": args.total_updates, "windows": args.windows,
+               "rows": rows}
+    write_json(os.path.join(RESULTS_DIR, "bench_scenarios.json"), payload)
+    if args.update_baseline:
+        write_json(os.path.abspath(BASELINE_PATH), payload)
+        print(f"baseline written: {os.path.abspath(BASELINE_PATH)}")
+    return check_gate(rows)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -68,40 +68,35 @@ class BenchSpec:
 
 
 def _build(spec: BenchSpec):
+    """BenchSpec -> (FedRun, dataset, task) through the scenario API: one
+    ScenarioSpec carries the fleet/model/training knobs (model-size presets
+    live in data/registry.py, config blocks in FedConfig.from_scenario)."""
     import jax
 
+    from repro.core import strategies
     from repro.core.engine import FedConfig, FedRun
-    from repro.core.strategies import get_strategy
     from repro.core.tasks import MMTask
-    from repro.data import make_har_dataset, mm_config_for
-    from repro.sim import make_fleet, scale_fleet
+    from repro.data import get_provider
+    from repro.sim import ScenarioSpec, build_fleet
 
-    ds = make_har_dataset(spec.dataset, windows_per_subject=spec.windows,
-                          seed=spec.seed)
-    n_low = 2 if spec.dataset == "pamap2" else 4
-    fleet = make_fleet(3, 3, n_low, M=4, hetero_scale=spec.hetero_scale)
-    if spec.n_clients and spec.n_clients != fleet.N:
-        fleet = scale_fleet(fleet, spec.n_clients,
-                            np.random.default_rng(spec.seed))
-        ds = make_har_dataset(spec.dataset, windows_per_subject=spec.windows,
-                              seed=spec.seed, n_subjects=spec.n_clients)
-    if spec.small:
-        kw = (dict(d_feat=16, d_fused=64, cnn_ch=(16, 32))
-              if spec.backbone == "b1" else
-              dict(d_feat=16, d_fused=64, enc_layers=2, enc_d=32, enc_ff=64))
-    else:
-        kw = (dict(d_feat=32, d_fused=128, cnn_ch=(32, 64))
-              if spec.backbone == "b1" else
-              dict(d_feat=32, d_fused=128, enc_layers=4, enc_d=128,
-                   enc_ff=256))
-    cfg = mm_config_for(spec.dataset,
-                        backbone="cnn" if spec.backbone == "b1"
-                        else "transformer", **kw)
+    sspec = ScenarioSpec(
+        name=spec.key(), dataset=spec.dataset, missing="none",
+        windows_per_subject=spec.windows,
+        fleet=(3, 3, 2 if spec.dataset == "pamap2" else 4),
+        n_clients=spec.n_clients, hetero_scale=spec.hetero_scale,
+        strategy=spec.method,
+        backbone="cnn" if spec.backbone == "b1" else "transformer",
+        small_model=spec.small, rounds=spec.rounds,
+        eval_every=max(spec.rounds // 10, 1), t_overhead=0.1,
+        utilization=2e-5, seed=spec.seed)
+    provider = get_provider(spec.dataset)
+    fleet = build_fleet(sspec)
+    ds = provider.build(seed=spec.seed, n_clients=fleet.N,
+                        windows_per_subject=spec.windows)
+    cfg = provider.mm_config(sspec.backbone, small=spec.small)
     task, tr0 = MMTask.create(cfg, jax.random.PRNGKey(spec.seed))
-    fed = FedConfig(rounds=spec.rounds, eval_every=max(spec.rounds // 10, 1),
-                    seed=spec.seed, utilization=2e-5, t_overhead=0.1,
-                    sim_mode=spec.sim_mode)
-    run = FedRun.create(task, tr0, get_strategy(spec.method), fleet, fed)
+    fed = FedConfig.from_scenario(sspec, sim_mode=spec.sim_mode)
+    run = FedRun.create(task, tr0, strategies.get(spec.method), fleet, fed)
     return run, ds, task
 
 

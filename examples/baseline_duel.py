@@ -8,7 +8,8 @@ import jax
 import numpy as np
 
 from repro.core.engine import FedConfig, FedRun
-from repro.core.strategies import ALL_BASELINES, get_strategy
+from repro.core import strategies
+from repro.core.strategies import ALL_BASELINES
 from repro.core.tasks import MMTask
 from repro.data import make_har_dataset, mm_config_for
 from repro.sim import make_fleet
@@ -33,7 +34,7 @@ def main():
 
     rows = []
     for name in list(ALL_BASELINES) + ["relief"]:
-        run = FedRun.create(task, tr0, get_strategy(name), fleet, fed)
+        run = FedRun.create(task, tr0, strategies.get(name), fleet, fed)
         h = run.run(ds)
         rows.append((name, h["f1"][-1], float(np.mean(h["round_time_s"])),
                      float(np.mean(h["energy_j"])),

@@ -16,10 +16,9 @@ import jax
 import numpy as np
 
 from repro.core.async_engine import AsyncFedConfig, VectorizedAsyncFedRun
-from repro.core.strategies import async_relief
 from repro.core.tasks import MMTask
-from repro.data import mm_config_for
-from repro.sim import make_fleet, scale_fleet
+from repro.data import get_provider
+from repro.sim import FleetConfig, ScenarioSpec
 
 
 def main():
@@ -36,19 +35,21 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    fleet = scale_fleet(make_fleet(3, 3, 2, M=4), args.n,
-                        np.random.default_rng(args.seed))
-    cfg = mm_config_for("pamap2", backbone="cnn", d_feat=16, d_fused=64,
-                        cnn_ch=(16, 32))
+    # pure system simulation: the spec drives fleet + runtime config, but
+    # no dataset is built (grad_mode="none" skips all gradient work)
+    spec = ScenarioSpec(
+        "fleet_scale", n_clients=args.n, strategy="async_relief",
+        strategy_args=(("buffer_size", args.buffer),), rounds=1,
+        local_epochs=1, steps_per_epoch=1, batch_size=4, eval_every=0,
+        jitter_sigma=args.jitter, grad_mode="none", seed=args.seed)
+    fleet = FleetConfig.from_scenario(spec)
+    cfg = get_provider(spec.dataset).mm_config(spec.backbone,
+                                               small=spec.small_model)
     task, tr0 = MMTask.create(cfg, jax.random.PRNGKey(args.seed))
-    fed = AsyncFedConfig(rounds=1, local_epochs=1, steps_per_epoch=1,
-                         batch_size=4, eval_every=0, seed=args.seed,
-                         utilization=2e-5, t_overhead=0.05,
-                         jitter_sigma=args.jitter, grad_mode="none",
-                         churn_rate=args.churn_rate,
-                         arrival_rate=args.arrival_rate)
+    fed = AsyncFedConfig.from_scenario(spec, churn_rate=args.churn_rate,
+                                       arrival_rate=args.arrival_rate)
     run = VectorizedAsyncFedRun.create(
-        task, tr0, async_relief(buffer_size=args.buffer), fleet, fed)
+        task, tr0, spec.build_strategy(), fleet, fed)
 
     total = args.flushes * min(args.buffer, args.n)
     t0 = time.perf_counter()

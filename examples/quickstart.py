@@ -12,8 +12,8 @@ import argparse
 import jax
 import numpy as np
 
+from repro.core import strategies
 from repro.core.engine import FedConfig, FedRun
-from repro.core.strategies import get_strategy
 from repro.core.tasks import MMTask
 from repro.data import make_har_dataset, mm_config_for
 from repro.sim import make_fleet
@@ -40,7 +40,7 @@ def main():
     results = {}
     for name in ("fedavg", "relief"):
         print(f"=> training with {name}")
-        run = FedRun.create(task, tr0, get_strategy(name), fleet, fed)
+        run = FedRun.create(task, tr0, strategies.get(name), fleet, fed)
         h = run.run(ds, log_every=max(args.rounds // 4, 1))
         results[name] = h
 

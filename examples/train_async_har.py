@@ -13,12 +13,12 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core.async_engine import AsyncFedConfig, AsyncFedRun
+from repro.core import strategies
+from repro.core.async_engine import AsyncFedRun
 from repro.core.engine import FedConfig, FedRun
-from repro.core.strategies import async_relief, get_strategy
 from repro.core.tasks import MMTask
-from repro.data import make_har_dataset, mm_config_for
-from repro.sim import make_fleet
+from repro.data import get_provider
+from repro.sim import ScenarioSpec, build_scenario
 
 
 def main():
@@ -40,39 +40,38 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    ds = make_har_dataset(args.dataset, windows_per_subject=200,
-                          seed=args.seed)
-    n_low = 2 if args.dataset == "pamap2" else 4
-    fleet = make_fleet(3, 3, n_low, M=4, hetero_scale=args.hetero)
-    cfg = mm_config_for(args.dataset, backbone="cnn", d_feat=16, d_fused=64,
-                        cnn_ch=(16, 32))
+    # one frozen spec describes the whole experiment; build_scenario
+    # materializes dataset + fleet + strategy + AsyncFedConfig from it
+    spec = ScenarioSpec(
+        "train_async_har", dataset=args.dataset, windows_per_subject=200,
+        fleet=(3, 3, 2 if args.dataset == "pamap2" else 4),
+        hetero_scale=args.hetero, strategy="async_relief",
+        strategy_args=(("buffer_size", args.buffer),
+                       ("staleness_exponent", args.staleness_exp)),
+        uplink_codec=args.codec, rounds=args.rounds,
+        eval_every=max(args.rounds // 2, 1), t_overhead=1e-3,
+        jitter_sigma=args.jitter, seed=args.seed)
+    sc = build_scenario(spec)
+    cfg = get_provider(args.dataset).mm_config(spec.backbone,
+                                               small=spec.small_model)
     task, tr0 = MMTask.create(cfg, jax.random.PRNGKey(args.seed))
-    print(f"[async driver] {args.dataset}: fleet N={fleet.N} "
+    print(f"[async driver] {args.dataset}: fleet N={sc.fleet.N} "
           f"({args.hetero:.0f}x compute gap), G={task.layout.G} groups, "
           f"K={args.buffer}, a={args.staleness_exp}")
 
     # --- synchronous FedAvg reference (same device model, same total work)
-    sfed = FedConfig(rounds=args.rounds, eval_every=max(args.rounds // 5, 1),
-                     seed=args.seed, utilization=2e-5, t_overhead=1e-3)
-    sync = FedRun.create(task, tr0, get_strategy("fedavg"), fleet, sfed)
-    hs = sync.run(ds)
+    sfed = FedConfig.from_scenario(spec, eval_every=max(args.rounds // 5, 1))
+    sync = FedRun.create(task, tr0, strategies.get("fedavg"), sc.fleet, sfed)
+    hs = sync.run(sc.dataset)
     sync_total = float(np.sum(hs["round_time_s"]))
     print(f"[sync fedavg ] {args.rounds} rounds in simulated "
           f"{sync_total:9.2f}s  F1 {hs['f1'][-1]:.3f}  "
           f"E {np.sum(hs['energy_j']):.0f}J")
 
     # --- event-driven run
-    afed = AsyncFedConfig(rounds=args.rounds,
-                          eval_every=max(args.rounds // 2, 1),
-                          seed=args.seed, utilization=2e-5, t_overhead=1e-3,
-                          jitter_sigma=args.jitter,
-                          uplink_codec=args.codec)
-    arun = AsyncFedRun.create(
-        task, tr0, async_relief(buffer_size=args.buffer,
-                                staleness_exponent=args.staleness_exp),
-        fleet, afed)
-    ha = arun.run(ds, log_every=max(args.rounds * fleet.N
-                                    // args.buffer // 10, 1))
+    arun = AsyncFedRun.create(task, tr0, sc.strategy, sc.fleet, sc.fed)
+    ha = arun.run(sc.dataset, log_every=max(args.rounds * sc.fleet.N
+                                            // args.buffer // 10, 1))
     async_total = float(arun.state.sim_time)
     print(f"[async relief] {arun.state.round} flushes "
           f"({arun.trace.completions} updates) in simulated "

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.core.engine import FedConfig, FedRun
-from repro.core.strategies import get_strategy
+from repro.core import strategies
 from repro.core.tasks import MMTask
 from repro.data import make_har_dataset, mm_config_for
 from repro.sim import make_fleet
@@ -57,7 +57,7 @@ def main():
 
     fed = FedConfig(rounds=args.rounds, eval_every=10, seed=args.seed,
                     utilization=2e-5, dropout_prob=args.dropout)
-    run = FedRun.create(task, tr0, get_strategy(args.strategy), fleet, fed)
+    run = FedRun.create(task, tr0, strategies.get(args.strategy), fleet, fed)
 
     ckpt = CheckpointManager(args.ckpt_dir, keep=2)
     restored = ckpt.restore_latest({"trainable": run.state.trainable})

@@ -69,7 +69,8 @@ from repro.core import aggregation as AG
 from repro.core import mdlora
 from repro.core.engine import (AllocPlan, FedConfig, _rank_gates, allocate,
                                allocate_rows, draw_client_batches,
-                               make_local_update, plan_allocation)
+                               make_local_update, plan_allocation,
+                               scenario_fed_kwargs)
 from repro.core.strategies import AsyncStrategy
 from repro.core.tasks import MMTask
 from repro.sim import FaultModel, FaultRuntime, FleetConfig
@@ -106,6 +107,29 @@ class AsyncFedConfig(FedConfig):
     # fleet fault injection (sim/faults.py): Byzantine delta corruption,
     # mid-round dropout, stalls. None (or byzantine_frac = 0) = fault-free.
     faults: FaultModel | None = None
+    # time-varying modality availability (sim/scenarios.StreamingSchedule):
+    # when set, each dispatch evaluates the client's LIVE modality mask at
+    # the dispatch time — allocation candidates, local-training masks, and
+    # the flush's cohort membership all follow it. None = the fleet's
+    # static possession mask.
+    modality_schedule: Any = None
+
+    @classmethod
+    def from_scenario(cls, spec, fleet=None, **overrides):
+        """Build the async runtime config a ``sim.scenarios.ScenarioSpec``
+        describes (duck-typed). For streaming scenarios the
+        ``modality_schedule`` is derived from the spec (pass ``fleet`` to
+        reuse an already-built fleet's possession base)."""
+        kw = scenario_fed_kwargs(spec) | dict(
+            jitter_sigma=spec.jitter_sigma, total_updates=spec.total_updates,
+            uplink_codec=spec.uplink_codec, grad_mode=spec.grad_mode,
+            faults=spec.faults)
+        if (getattr(spec, "missing", None) == "streaming"
+                and "modality_schedule" not in overrides):
+            from repro.sim.scenarios import schedule_for
+
+            kw["modality_schedule"] = schedule_for(spec, fleet)
+        return cls(**(kw | overrides))
 
 
 @dataclasses.dataclass
@@ -127,7 +151,8 @@ def _make_state(G: int, trainable0: Any, seed: int) -> AsyncFedState:
 UPLINK_CODECS = ("none", "int8")
 
 
-def _check_strategy(strategy: AsyncStrategy, fed: AsyncFedConfig) -> None:
+def _check_strategy(strategy: AsyncStrategy, fed: AsyncFedConfig,
+                    fleet: FleetConfig | None = None) -> None:
     if strategy.personal or strategy.share_only:
         raise ValueError("async runtime keeps one global model; "
                          "personalized strategies are sync-only")
@@ -140,6 +165,18 @@ def _check_strategy(strategy: AsyncStrategy, fed: AsyncFedConfig) -> None:
     if strategy.robust not in AG.ROBUST_AGGREGATORS:
         raise ValueError(f"robust must be one of {AG.ROBUST_AGGREGATORS}, "
                          f"got {strategy.robust!r}")
+    if strategy.selective and not 0.0 < strategy.comm_budget <= 1.0:
+        raise ValueError(f"comm_budget must be in (0, 1], "
+                         f"got {strategy.comm_budget}")
+    sched = fed.modality_schedule
+    if sched is not None:
+        if strategy.alloc == "random":
+            raise ValueError("alloc='random' redraws fleet-shaped noise per "
+                             "dispatch; incompatible with a time-varying "
+                             "modality schedule")
+        if fleet is not None and (sched.N != fleet.N or sched.M != fleet.M):
+            raise ValueError(f"modality_schedule shape ({sched.N}, {sched.M})"
+                             f" does not match fleet ({fleet.N}, {fleet.M})")
 
 
 def _make_fault_runtime(fed: AsyncFedConfig,
@@ -147,6 +184,47 @@ def _make_fault_runtime(fed: AsyncFedConfig,
     if fed.faults is not None and fed.faults.active:
         return FaultRuntime(fed.faults, fleet.modality_mask)
     return None
+
+
+def _selective_upload(layout: mdlora.GroupLayout, deltas: Any,
+                      S: np.ndarray, budget: float) -> np.ndarray:
+    """FedMFS selective modality communication: which trained blocks to
+    upload. Per client, blocks are ranked by Shapley-style utility per byte
+    — ||delta_g||^2 / size_g, the marginal-contribution proxy of
+    arXiv:2310.07048 — and taken greedily while the cumulative size fits
+    ``budget`` x (the client's full trained upload). The top block is always
+    taken (an empty upload would stall the protocol); later blocks that
+    overflow are skipped, not a hard stop, so the knapsack packs tightly.
+
+    Deterministic in (deltas, S): no rng, stable sort — the heap and
+    vectorized runtimes select identical sets for identical dispatches.
+    """
+    norms = np.asarray(jax.vmap(
+        lambda t: mdlora.group_norms(layout, t))(deltas))  # [K, G] squared
+    sizes = np.asarray(layout.sizes, np.float64)
+    S = np.asarray(S, bool)
+    S_up = np.zeros_like(S)
+    for k in range(S.shape[0]):
+        cand = np.nonzero(S[k])[0]
+        if len(cand) == 0:
+            continue
+        cap = budget * float(sizes[cand].sum())
+        density = norms[k, cand] / np.maximum(sizes[cand], 1.0)
+        order = cand[np.argsort(-density, kind="stable")]
+        spent = 0.0
+        for j, g in enumerate(order):
+            if j == 0 or spent + sizes[g] <= cap:
+                S_up[k, g] = True
+                spent += sizes[g]
+    return S_up
+
+
+def _gate_rows(layout: mdlora.GroupLayout, deltas: Any,
+               S_up: np.ndarray) -> Any:
+    """Zero the non-uploaded blocks of a client-stacked delta pytree."""
+    gates = jnp.asarray(S_up, jnp.float32)
+    return jax.vmap(lambda t, g: mdlora.group_gate_tree(layout, t, g))(
+        deltas, gates)
 
 
 def _history_init() -> dict:
@@ -164,10 +242,11 @@ class _Pending:
     version: int  # server version pulled at dispatch
     delta: Any  # trainable-shaped update
     loss: float
-    S_row: np.ndarray  # [G] groups trained
+    S_row: np.ndarray  # [G] groups uploaded (= trained unless selective)
     t_comp: float
     t_comm: float
     upload_bytes: float
+    mmask_row: np.ndarray  # [M] live modality mask at dispatch
     # fault-injected mid-round crash: the completion event still fires (it
     # times the client's reboot + redispatch) but is never absorbed — no
     # buffer entry, no energy/upload accounting, no progress
@@ -190,7 +269,8 @@ class _ServerFlushMixin:
 
     def _flush_arrays(self, deltas: Any, S: np.ndarray,
                       client_ids: np.ndarray, losses: np.ndarray | None,
-                      staleness: np.ndarray) -> dict:
+                      staleness: np.ndarray,
+                      mmask_rows: np.ndarray | None = None) -> dict:
         """Fold one buffered cohort into the global model (one server
         version). ``deltas``: client-stacked pytree ([K, ...] leaves) or an
         ``aggregation.QuantizedStack`` (int8 uplink — ingested through the
@@ -205,6 +285,12 @@ class _ServerFlushMixin:
         K = len(client_ids)
         quant = isinstance(deltas, AG.QuantizedStack)
         staleness = np.asarray(staleness, np.float64)
+        # cohorts are per-flush: under a streaming schedule each buffered
+        # update carries the modality mask it was dispatched with, and both
+        # the Eq. 3-4 cohort weights and the Eq. 5 divergence cohorts below
+        # follow it instead of the fleet's static possession
+        if mmask_rows is None:
+            mmask_rows = fleet.modality_mask[client_ids]
         fresh = np.ones(K, bool)
         if self.strategy.max_staleness is not None:
             fresh = staleness <= self.strategy.max_staleness
@@ -212,7 +298,7 @@ class _ServerFlushMixin:
 
         if deltas is not None:
             trained = jnp.asarray(S, jnp.float32)
-            mmask = jnp.asarray(fleet.modality_mask[client_ids], jnp.float32)
+            mmask = jnp.asarray(mmask_rows, jnp.float32)
             a = self.strategy.staleness_exponent
             scale = (None if a == 0.0
                      else AG.staleness_discounts(staleness, a))
@@ -231,7 +317,7 @@ class _ServerFlushMixin:
 
             # divergence cohort: possession AND trained (paper Eq. 5 on the
             # buffered subset)
-            acc = layout.accessible(fleet.modality_mask[client_ids])
+            acc = layout.accessible(mmask_rows)
             C = jnp.asarray(acc & (S > 0), jnp.float32)
 
             self.aggbuf.reset()
@@ -322,11 +408,15 @@ class AsyncFedRun(_ServerFlushMixin):
     # update, so the compressed stream telescopes to the uncompressed one
     ef: dict = dataclasses.field(default_factory=dict)
     fx: FaultRuntime | None = None  # fault injection (fed.faults)
+    # fleet-static allocation inputs (None for alloc="random", which redraws
+    # fleet-shaped noise per dispatch through the legacy allocate() path to
+    # preserve its rng stream)
+    plan: AllocPlan | None = None
 
     @classmethod
     def create(cls, task: MMTask, trainable0: Any, strategy: AsyncStrategy,
                fleet: FleetConfig, fed: AsyncFedConfig) -> AsyncFedRun:
-        _check_strategy(strategy, fed)
+        _check_strategy(strategy, fed, fleet)
         state = _make_state(task.layout.G, trainable0, fed.seed)
         trace = AsyncTrace()
         trace.init_fleet(fleet.N)
@@ -336,11 +426,13 @@ class AsyncFedRun(_ServerFlushMixin):
                                     robust=strategy.robust,
                                     trim_frac=strategy.trim_frac,
                                     krum_f=strategy.krum_f)
+        plan = (plan_allocation(strategy, task, fleet, fed, task.layout.flops)
+                if strategy.alloc != "random" else None)
         return cls(task, strategy, fleet, fed, state,
                    make_local_update(task, fed, strategy.prox_mu),
                    _rank_gates(trainable0, strategy, fleet), EventQueue(),
                    [], trace, _history_init(), aggbuf, trainable0,
-                   fx=_make_fault_runtime(fed, fleet))
+                   fx=_make_fault_runtime(fed, fleet), plan=plan)
 
     # -- client dispatch ------------------------------------------------------
 
@@ -354,9 +446,24 @@ class AsyncFedRun(_ServerFlushMixin):
         if K == 0:
             return
 
-        S_full, _ = allocate(self.strategy, state, task, fleet, fed,
-                             layout.flops)
-        S = S_full[clients]  # [K, G]
+        sched = fed.modality_schedule
+        live_mm = (sched.masks_at(now, clients) if sched is not None
+                   else fleet.modality_mask[clients])
+        if self.plan is None:  # alloc="random": legacy full-fleet rng draw
+            S_full, _ = allocate(self.strategy, state, task, fleet, fed,
+                                 layout.flops)
+            S = S_full[clients]  # [K, G]
+        elif sched is not None:
+            # time-varying masks: allocation candidates follow the LIVE
+            # accessibility at dispatch time (budgets stay plan-static)
+            unaware = self.strategy.alloc in ("full", "magnitude", "depth")
+            S = allocate_rows(
+                self.plan, self.strategy, state, clients,
+                cand=None if unaware else layout.accessible(live_mm),
+                mandatory=(layout.mandatory(live_mm)
+                           if self.strategy.mandatory else None))
+        else:
+            S = allocate_rows(self.plan, self.strategy, state, clients)
         fault = (self.fx.on_dispatch(clients)
                  if self.fx is not None else None)
 
@@ -366,13 +473,18 @@ class AsyncFedRun(_ServerFlushMixin):
         start = jax.tree.map(
             lambda g: jnp.broadcast_to(g, (K,) + g.shape), state.trainable)
         gates = jnp.asarray(S, jnp.float32)
-        mmasks = jnp.asarray(fleet.modality_mask[clients], jnp.float32)
+        mmasks = jnp.asarray(live_mm, jnp.float32)
         rank_gate = jax.tree.map(lambda x: x[clients], self.rank_gate)
         deltas, losses = self.local_update(start, batches, mmasks, gates,
                                            rank_gate, fed.lr)
         if fault is not None:  # corrupt pre-quantization, like a real client
             dropped, slow, byz_rows, tickets = fault
             deltas = self.fx.corrupt(deltas, byz_rows, clients, tickets)
+        S_up = S
+        if self.strategy.selective:  # FedMFS: shrink the upload, not compute
+            S_up = _selective_upload(layout, deltas, S,
+                                     self.strategy.comm_budget)
+            deltas = _gate_rows(layout, deltas, S_up)
 
         examples = steps * fed.batch_size
         if fed.sim_mode == "flop_proportional":
@@ -383,7 +495,7 @@ class AsyncFedRun(_ServerFlushMixin):
             trained_fl = (np.asarray(S, np.float64) @ layout.flops
                           ) * examples * 2.0
             fixed_fl = np.full(K, task.forward_flops_per_example() * examples)
-        upload = ((np.asarray(S, np.float64) @ layout.sizes)
+        upload = ((np.asarray(S_up, np.float64) @ layout.sizes)
                   * self._uplink_bytes_per_param)
         dur, t_comp, t_comm = completion_times(
             fleet, clients, trained_fl, fixed_fl, upload, fed.t_overhead,
@@ -402,8 +514,8 @@ class AsyncFedRun(_ServerFlushMixin):
                 self.ef[int(c)] = resid
                 d_i = (q_i, s_i)
             pend = _Pending(int(c), state.round, d_i,
-                            float(losses_np[i]), S[i], float(t_comp[i]),
-                            float(t_comm[i]), float(upload[i]),
+                            float(losses_np[i]), S_up[i], float(t_comp[i]),
+                            float(t_comm[i]), float(upload[i]), live_mm[i],
                             dropped=fault is not None and bool(dropped[i]))
             self.queue.push(now + dur[i], int(c), payload=pend)
 
@@ -428,7 +540,9 @@ class AsyncFedRun(_ServerFlushMixin):
         staleness = np.array([self.state.round - e.version for e in entries],
                              np.float64)
         losses = np.array([e.loss for e in entries])
-        return self._flush_arrays(deltas, S, client_ids, losses, staleness)
+        mmask_rows = np.stack([e.mmask_row for e in entries])
+        return self._flush_arrays(deltas, S, client_ids, losses, staleness,
+                                  mmask_rows=mmask_rows)
 
     # -- the event loop -------------------------------------------------------
 
@@ -519,6 +633,7 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         self._buf_client: list[np.ndarray] = []
         self._buf_version: list[np.ndarray] = []
         self._buf_bits: list[np.ndarray] = []
+        self._buf_mmbits: list[np.ndarray] = []  # live modality masks
         self._buf_ticket: list[np.ndarray] = []
         self._buf_fticket: list[np.ndarray] = []  # fault tickets (fx only)
         self._buf_loss: list[np.ndarray] = []
@@ -546,10 +661,14 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
     def create(cls, task: MMTask, trainable0: Any, strategy: AsyncStrategy,
                fleet: FleetConfig, fed: AsyncFedConfig
                ) -> VectorizedAsyncFedRun:
-        _check_strategy(strategy, fed)
+        _check_strategy(strategy, fed, fleet)
         if fed.grad_mode not in GRAD_MODES:
             raise ValueError(f"grad_mode must be one of {GRAD_MODES}, "
                              f"got {fed.grad_mode!r}")
+        if strategy.selective and fed.grad_mode != "dispatch":
+            raise ValueError("selective upload ranks the actual deltas at "
+                             "dispatch; grad_mode='cohort'/'none' never "
+                             "materializes them")
         if strategy.rank_caps:
             raise ValueError("rank_caps build an [N, ...]-stacked gate tree "
                              "— unsupported at fleet scale")
@@ -592,7 +711,18 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         B = len(idx)
         if B == 0:
             return
-        S = allocate_rows(self.plan, self.strategy, state, idx)  # [B, G]
+        sched = fed.modality_schedule
+        live_mm = (sched.masks_at(now, idx) if sched is not None
+                   else fleet.modality_mask[idx])
+        if sched is not None:  # live candidates, plan-static budgets
+            unaware = self.strategy.alloc in ("full", "magnitude", "depth")
+            S = allocate_rows(
+                self.plan, self.strategy, state, idx,
+                cand=None if unaware else layout.accessible(live_mm),
+                mandatory=(layout.mandatory(live_mm)
+                           if self.strategy.mandatory else None))
+        else:
+            S = allocate_rows(self.plan, self.strategy, state, idx)  # [B, G]
         fault = None
         if self.fx is not None:
             fault = self.fx.on_dispatch(idx)
@@ -600,6 +730,7 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
             self._fault_ticket[idx] = fault[3]
 
         steps = fed.local_epochs * fed.steps_per_epoch
+        S_up = S  # uploaded set (= trained unless selective shrinks it)
         if self.grad_mode == "dispatch":
             batches = draw_client_batches(state.rng, dataset, idx, steps,
                                           fed.batch_size)
@@ -607,12 +738,16 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
                 lambda g: jnp.broadcast_to(g, (B,) + g.shape),
                 state.trainable)
             gates = jnp.asarray(S, jnp.float32)
-            mmasks = jnp.asarray(fleet.modality_mask[idx], jnp.float32)
+            mmasks = jnp.asarray(live_mm, jnp.float32)
             deltas, losses = self.local_update(
                 start, batches, mmasks, gates, self._rank_gate_rows(B),
                 fed.lr)
             if fault is not None:  # corrupt pre-quantization (heap parity)
                 deltas = self.fx.corrupt(deltas, fault[2], idx, fault[3])
+            if self.strategy.selective:  # FedMFS: shrink upload, not compute
+                S_up = _selective_upload(layout, deltas, S,
+                                         self.strategy.comm_budget)
+                deltas = _gate_rows(layout, deltas, S_up)
             quantize = fed.uplink_codec == "int8"
             if self._pend_deltas is None:
                 store_dtype = jnp.int8 if quantize else jnp.float32
@@ -654,7 +789,7 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
             trained_fl = (np.asarray(S, np.float64) @ layout.flops
                           ) * examples * 2.0
             fixed_fl = np.full(B, task.forward_flops_per_example() * examples)
-        upload = ((np.asarray(S, np.float64) @ layout.sizes)
+        upload = ((np.asarray(S_up, np.float64) @ layout.sizes)
                   * self._uplink_bytes_per_param)
         dur, t_comp, t_comm = T.cycle_times(
             fleet, idx, trained_fl, fixed_fl, upload, fed.t_overhead,
@@ -663,8 +798,9 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
             slow = fault[1]
             dur = dur + t_comp * (slow - 1.0)
             t_comp = t_comp * slow
-        self.fstate.dispatch(idx, now, state.round, pack_group_bits(S),
+        self.fstate.dispatch(idx, now, state.round, pack_group_bits(S_up),
                              dur, t_comp, t_comm, upload)
+        self.fstate.mod_bits[idx] = pack_group_bits(live_mm)
 
     # -- completion absorption / flush ----------------------------------------
 
@@ -673,6 +809,7 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         self._buf_client.append(chunk.copy())
         self._buf_version.append(fs.version[chunk].copy())
         self._buf_bits.append(fs.group_bits[chunk].copy())
+        self._buf_mmbits.append(fs.mod_bits[chunk].copy())
         self._buf_ticket.append(fs.updates[chunk].copy())
         if self.fx is not None:  # cycle's fault ticket, before redispatch
             self._buf_fticket.append(self._fault_ticket[chunk].copy())
@@ -687,8 +824,8 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         self._buf_count += len(chunk)
 
     def _cohort_update(self, dataset, ids: np.ndarray, versions: np.ndarray,
-                       tickets: np.ndarray, S: np.ndarray
-                       ) -> tuple[Any, np.ndarray]:
+                       tickets: np.ndarray, S: np.ndarray,
+                       mmask_rows: np.ndarray) -> tuple[Any, np.ndarray]:
         """Cohort-sampled gradient computation: local updates for the M
         flushed clients only, each starting from the ring snapshot of the
         version it pulled (pulls older than the ring clamp to the oldest
@@ -712,7 +849,7 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         batches = {"x": jnp.asarray(np.stack(xs)),
                    "y": jnp.asarray(np.stack(ys))}
         gates = jnp.asarray(S, jnp.float32)
-        mmasks = jnp.asarray(fleet.modality_mask[ids], jnp.float32)
+        mmasks = jnp.asarray(mmask_rows, jnp.float32)
         deltas, losses = self.local_update(
             start, batches, mmasks, gates, self._rank_gate_rows(len(ids)),
             fed.lr)
@@ -726,6 +863,8 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         tickets = np.concatenate(self._buf_ticket)[order]
         S = unpack_group_bits(np.concatenate(self._buf_bits)[order],
                               self.task.layout.G)
+        mmask_rows = unpack_group_bits(
+            np.concatenate(self._buf_mmbits)[order], self.fleet.M)
         staleness = (self.state.round - versions).astype(np.float64)
         quantize = self.fed.uplink_codec == "int8"
         if self.grad_mode == "dispatch":
@@ -741,7 +880,7 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
                     deltas, jax.tree.map(lambda x: x[jorder], scales))
         elif self.grad_mode == "cohort":
             deltas, losses = self._cohort_update(dataset, ids, versions,
-                                                 tickets, S)
+                                                 tickets, S, mmask_rows)
             if self.fx is not None:  # corrupt with the *buffered* cycle's
                 # fault ticket — the client may already be redispatched
                 ftickets = np.concatenate(self._buf_fticket)[order]
@@ -755,12 +894,13 @@ class VectorizedAsyncFedRun(_ServerFlushMixin):
         else:
             deltas, losses = None, None
         for buf in (self._buf_client, self._buf_version, self._buf_bits,
-                    self._buf_ticket, self._buf_fticket, self._buf_loss,
-                    self._buf_deltas, self._buf_scales):
+                    self._buf_mmbits, self._buf_ticket, self._buf_fticket,
+                    self._buf_loss, self._buf_deltas, self._buf_scales):
             buf.clear()
         self._buf_count = 0
 
-        rec = self._flush_arrays(deltas, S, ids, losses, staleness)
+        rec = self._flush_arrays(deltas, S, ids, losses, staleness,
+                                 mmask_rows=mmask_rows)
         if self.grad_mode == "cohort":  # retain the new version's snapshot
             R = max(1, self.fed.snapshot_ring)
             slot = self.state.round % R

@@ -55,6 +55,21 @@ class FedConfig:
     # full-model forward to everyone (reproduces the real-device gap).
     sim_mode: str = "flop_proportional"
 
+    @classmethod
+    def from_scenario(cls, spec, **overrides):
+        """Training knobs from a ``sim.scenarios.ScenarioSpec`` (duck-typed:
+        anything with the same field names works)."""
+        return cls(**(scenario_fed_kwargs(spec) | overrides))
+
+
+def scenario_fed_kwargs(spec) -> dict:
+    """The FedConfig fields a ScenarioSpec carries, as constructor kwargs."""
+    return dict(rounds=spec.rounds, local_epochs=spec.local_epochs,
+                steps_per_epoch=spec.steps_per_epoch,
+                batch_size=spec.batch_size, lr=spec.lr,
+                eval_every=spec.eval_every, t_overhead=spec.t_overhead,
+                utilization=spec.utilization, seed=spec.seed)
+
 
 @dataclasses.dataclass
 class FedState:
@@ -185,16 +200,23 @@ def plan_allocation(strategy: Strategy, task: MMTask, fleet: FleetConfig,
 
 
 def allocate_rows(plan: AllocPlan, strategy: Strategy, state: FedState,
-                  idx: np.ndarray) -> np.ndarray:
+                  idx: np.ndarray, cand: np.ndarray | None = None,
+                  mandatory: np.ndarray | None = None) -> np.ndarray:
     """S rows [len(idx), G] for the client subset ``idx``.
 
     Row-identical to ``allocate(...)[0][idx]`` for every deterministic
     allocator (scores are shared fleet-wide state, budgets come from the
     plan); ``alloc="random"`` draws fresh noise per call, so only
-    whole-fleet calls reproduce the legacy stream."""
+    whole-fleet calls reproduce the legacy stream.
+
+    ``cand``/``mandatory`` ([len(idx), G]) override the plan's fleet-static
+    masks — the hook for time-varying modality availability (streaming
+    scenarios), where the candidate set is a function of dispatch time while
+    the Eq. 7 budgets ``k`` stay solved over the base fleet."""
     idx = np.asarray(idx)
-    cand = plan.cand[idx]
-    mandatory = plan.mandatory[idx]
+    cand = plan.cand[idx] if cand is None else np.asarray(cand, bool)
+    mandatory = (plan.mandatory[idx] if mandatory is None
+                 else np.asarray(mandatory, bool))
     k = plan.k[idx]
     if strategy.alloc in ("full", "accessible"):
         return cand

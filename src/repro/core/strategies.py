@@ -168,6 +168,13 @@ class AsyncStrategy(Strategy):
     robust: str = "mean"
     trim_frac: float = 0.1  # beta for robust="trimmed"
     krum_f: int = 1  # assumed Byzantine count per cohort for robust="krum"
+    # FedMFS-style selective modality communication (arXiv:2310.07048):
+    # after local training, upload ONLY the modality-block deltas whose
+    # Shapley-style utility-per-byte clears a greedy knapsack under
+    # comm_budget x (full upload bytes). Compute cost is unchanged; the
+    # server aggregates the shrunk upload set.
+    selective: bool = False
+    comm_budget: float = 0.5  # fraction of the trained-set upload bytes kept
 
 
 def async_relief(buffer_size: int = 4, staleness_exponent: float = 0.5,
@@ -224,10 +231,32 @@ def relief_krum(krum_f: int = 1, **kw) -> AsyncStrategy:
                          robust="krum", krum_f=krum_f, **kw)
 
 
+def fedmfs_selective(comm_budget: float = 0.5, **kw) -> AsyncStrategy:
+    """FedMFS (Yuan et al., arXiv:2310.07048): modality-aware local training
+    with *selective modality-block upload* — each client ranks its trained
+    blocks by Shapley-style utility per byte (||delta_g||^2 / bytes_g, the
+    marginal-contribution proxy) and uploads greedily until the byte budget
+    is spent. No elastic compute budgeting: the selection is purely a
+    communication mechanism layered on accessible allocation."""
+    return AsyncStrategy("fedmfs_selective", alloc="accessible",
+                         budgets="none", agg="cohort", mandatory=True,
+                         selective=True, comm_budget=comm_budget, **kw)
+
+
+def relief_selective(comm_budget: float = 0.5, **kw) -> AsyncStrategy:
+    """async_relief + FedMFS selective upload: divergence-guided elastic
+    compute allocation AND utility-per-byte upload pruning."""
+    return AsyncStrategy("relief_selective", alloc="divergence",
+                         budgets="elastic", agg="cohort", mandatory=True,
+                         selective=True, comm_budget=comm_budget, **kw)
+
+
 ASYNC_STRATEGIES = {
     "async_relief": async_relief, "async_accessible": async_accessible,
     "async_fedbuff": async_fedbuff, "relief_trimmed": relief_trimmed,
     "relief_median": relief_median, "relief_krum": relief_krum,
+    "fedmfs_selective": fedmfs_selective,
+    "relief_selective": relief_selective,
 }
 
 
@@ -244,13 +273,42 @@ ABLATIONS = {
 }
 
 
+# ---------------------------------------------------------------------------
+# name-keyed registry — the single lookup surface for benchmarks/examples/
+# scenarios; the factory callables above remain as thin aliases
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, object] = {
+    "relief": relief, "v0": relief, "v1": relief_no_elastic,
+    "v2": relief_no_cohort, "v3": relief_random_alloc,
+    **ALL_BASELINES, **ASYNC_STRATEGIES,
+}
+
+
+def register(name: str, factory) -> None:
+    """Add a zero-arg (or all-defaults) Strategy factory under ``name``."""
+    _REGISTRY[name] = factory
+
+
+def names() -> list[str]:
+    """Registered strategy names (aliases like ``v0`` included)."""
+    return sorted(_REGISTRY)
+
+
+def get(name: str, **overrides) -> Strategy:
+    """Look up a strategy by name, optionally overriding any dataclass field:
+
+        strategies.get("relief_trimmed", trim_frac=0.2, buffer_size=8)
+
+    Overrides apply via ``dataclasses.replace`` on the factory's default
+    instance, so any field of Strategy/AsyncStrategy can be set — unknown
+    fields raise TypeError, unknown names raise ValueError."""
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown strategy {name!r}; known: {names()}")
+    strat = _REGISTRY[name]()
+    return dataclasses.replace(strat, **overrides) if overrides else strat
+
+
 def get_strategy(name: str) -> Strategy:
-    if name in ("relief", "v0"):
-        return relief()
-    if name in ABLATIONS:
-        return ABLATIONS[name]()
-    if name in ALL_BASELINES:
-        return ALL_BASELINES[name]()
-    if name in ASYNC_STRATEGIES:
-        return ASYNC_STRATEGIES[name]()
-    raise ValueError(f"unknown strategy {name}")
+    """Deprecated alias for :func:`get` (kept for older scripts)."""
+    return get(name)

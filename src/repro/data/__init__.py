@@ -1,3 +1,7 @@
-from repro.data.har import (DATASETS, HARDataset, client_batches,
-                            make_har_dataset, mm_config_for)
+from repro.data.har import (DATASETS, HARDataset, ModalityDef, client_batches,
+                            make_har_dataset, mm_config_for,
+                            synthesize_dataset)
+from repro.data.registry import (DatasetProvider, SyntheticProvider,
+                                 get_provider, provider_names,
+                                 register_provider)
 from repro.data.tokens import synthetic_token_batches

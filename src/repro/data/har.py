@@ -88,15 +88,18 @@ def _modality_signal(kind: str, cls: int, n_ch: int, n: int, t: np.ndarray,
     return out
 
 
-def make_har_dataset(name: str, windows_per_subject: int = 240,
-                     test_frac: float = 0.25, seed: int = 0,
-                     n_subjects: int | None = None,
-                     alpha: float = 1.0) -> HARDataset:
-    """alpha: Dirichlet concentration of per-subject class priors (non-IID)."""
-    spec = DATASETS[name]
-    mods = spec["modalities"]
-    n_classes = spec["n_classes"]
-    n_subj = n_subjects or spec["n_subjects"]
+def synthesize_dataset(name: str, modalities: tuple[ModalityDef, ...],
+                       n_classes: int, n_subjects: int,
+                       windows_per_subject: int = 240,
+                       test_frac: float = 0.25, seed: int = 0,
+                       alpha: float = 1.0) -> HARDataset:
+    """Spec-driven synthesis: any (modalities, n_classes, n_subjects) tuple
+    gets the same class-conditional + subject-effect generative process, so
+    dataset providers beyond the two HAR presets (data/registry.py) plug in
+    without touching this module. ``alpha``: Dirichlet concentration of
+    per-subject class priors (non-IID)."""
+    mods = modalities
+    n_subj = n_subjects
     rng = np.random.default_rng(seed)
     t = np.arange(WINDOW, dtype=np.float32) / RATE_HZ
 
@@ -125,6 +128,19 @@ def make_har_dataset(name: str, windows_per_subject: int = 240,
         tr_x.append(x[n_te:])
         tr_y.append(y[n_te:])
     return HARDataset(name, tr_x, tr_y, te_x, te_y, n_classes, mods)
+
+
+def make_har_dataset(name: str, windows_per_subject: int = 240,
+                     test_frac: float = 0.25, seed: int = 0,
+                     n_subjects: int | None = None,
+                     alpha: float = 1.0) -> HARDataset:
+    """The two paper presets (PAMAP2 / MHEALTH lookalikes), registered as
+    dataset providers in data/registry.py."""
+    spec = DATASETS[name]
+    return synthesize_dataset(name, spec["modalities"], spec["n_classes"],
+                              n_subjects or spec["n_subjects"],
+                              windows_per_subject=windows_per_subject,
+                              test_frac=test_frac, seed=seed, alpha=alpha)
 
 
 def mm_config_for(name: str, backbone: str = "cnn", d_feat: int = 32,

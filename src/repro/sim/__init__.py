@@ -3,4 +3,10 @@ from repro.sim.devices import (DEVICE_PROFILES, DeviceProfile, FleetConfig,
 from repro.sim.faults import CORRUPTIONS, FaultModel, FaultRuntime
 from repro.sim.fleet import (FleetState, PopulationModel, pack_group_bits,
                              unpack_group_bits)
+from repro.sim.scenarios import (MISSING_GENERATORS, SCENARIOS, Scenario,
+                                 ScenarioSpec, StreamingSchedule,
+                                 build_fleet, build_scenario, get_scenario,
+                                 make_run, scenario_names,
+                                 static_missing_mask, streaming_schedule,
+                                 tiered_missing_mask)
 from repro.sim.timing import RoundCost, cycle_times, simulate_round

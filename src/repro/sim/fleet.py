@@ -68,7 +68,8 @@ class FleetState:
     t_next: np.ndarray  # [N] float64, +inf = no event scheduled
     seq: np.ndarray  # [N] int64 dispatch order (FIFO tie-break)
     version: np.ndarray  # [N] int64 pulled server version
-    group_bits: np.ndarray  # [N] uint64 trained-group bitmask
+    group_bits: np.ndarray  # [N] uint64 uploaded-group bitmask
+    mod_bits: np.ndarray  # [N] uint64 live modality mask at dispatch
     t_comp: np.ndarray  # [N] in-flight compute seconds
     t_comm: np.ndarray  # [N] in-flight comm seconds
     upload_bytes: np.ndarray  # [N] in-flight upload volume
@@ -85,6 +86,7 @@ class FleetState:
                    seq=np.zeros(n, np.int64),
                    version=np.zeros(n, np.int64),
                    group_bits=np.zeros(n, np.uint64),
+                   mod_bits=np.zeros(n, np.uint64),
                    t_comp=np.zeros(n), t_comm=np.zeros(n),
                    upload_bytes=np.zeros(n), energy_j=np.zeros(n),
                    updates=np.zeros(n, np.int64),
